@@ -1,0 +1,234 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+undercounts every ``lax.scan``-structured model (layer stacks, microbatch
+accumulation, flash-attention chunking) by the trip count — and the same
+holds for collective bytes.  This module re-derives per-device costs from
+``compiled.as_text()`` with loops multiplied out:
+
+    cost(computation) = sum(op costs) + sum(trip(w) * cost(body(w)))
+
+FLOPs: dot ops (2 * prod(result) * prod(contracted dims)) + 1 flop/elem
+for arithmetic elementwise ops.  Bytes: operand+result sizes of top-level
+(post-fusion) instructions — fusion calls count their boundary tensors,
+which is exactly the HBM traffic model.  Collectives: result bytes per
+kind, trip-multiplied.
+
+Trip counts: scan-counted loops compare the induction var against an s32
+constant in the condition computation; we take the largest such constant.
+Validated against hand-counted examples in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_SHAPE = re.compile(r"(pred|bf16|[sufc]\d+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s*"
+                    r"([\w\-]+)\((.*)\)(.*)$")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "power", "negate", "abs", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "logistic", "sign",
+    "compare", "select", "and", "or", "xor", "not", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "convert", "clamp",
+    "cosine", "sine", "atan2", "erf", "remainder",
+}
+SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "rtype", "op", "args", "attrs")
+
+    def __init__(self, name, rtype, op, args, attrs):
+        self.name, self.rtype, self.op = name, rtype, op
+        self.args, self.attrs = args, attrs
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4), m.group(5)))
+    return comps
+
+
+def _dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = _shape_elems(ins.rtype)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs + ins.args)
+    lhs_name = ins.args.split(",")[0].strip().lstrip("%")
+    lhs_type = symtab.get(lhs_name, "")
+    sm = _SHAPE.search(lhs_type)
+    if not (m and sm):
+        return 2.0 * out_elems  # fallback
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    contract = 1
+    for di in m.group(1).split(","):
+        if di and int(di) < len(dims):
+            contract *= dims[int(di)]
+    return 2.0 * out_elems * max(contract, 1)
+
+
+def _trip_count(cond_name: str, comps: Dict[str, List[Instr]]) -> int:
+    best = 1
+    for ins in comps.get(cond_name, []):
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", f"constant({ins.args})")
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps = parse_computations(hlo)
+    cache: Dict[str, Dict[str, float]] = {}
+
+    def cost_of(name: str) -> Dict[str, float]:
+        if name in cache:
+            return cache[name]
+        out = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+        for k in COLLECTIVES:
+            out[f"coll_{k}"] = 0.0
+        cache[name] = out  # guard cycles
+        symtab = {i.name: i.rtype for i in comps.get(name, [])}
+        for ins in comps.get(name, []):
+            op = ins.op
+            base = re.sub(r"-(start|done)$", "", op)
+            if op == "while":
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.args + ins.attrs)
+                body = re.search(r"body=%?([\w.\-]+)", ins.args + ins.attrs)
+                trip = _trip_count(cond.group(1), comps) if cond else 1
+                if body and body.group(1) in comps:
+                    sub = cost_of(body.group(1))
+                    for kk, vv in sub.items():
+                        out[kk] += trip * vv
+                continue
+            if op in ("fusion", "call", "conditional", "map", "custom-call",
+                      "sort", "reduce", "reduce-window", "scatter"):
+                # descend into called computations
+                for m in re.finditer(r"(?:calls=|to_apply=|branch_computations=\{)"
+                                     r"%?([\w.\-]+)", ins.args + ins.attrs):
+                    if m.group(1) in comps:
+                        sub = cost_of(m.group(1))
+                        for kk, vv in sub.items():
+                            out[kk] += vv
+            if base in COLLECTIVES:
+                if not op.endswith("-done"):
+                    b = _shape_bytes(ins.rtype)
+                    out["coll_bytes"] += b
+                    out[f"coll_{base}"] += b
+            if op in ("dot", "dot-general"):
+                out["flops"] += _dot_flops(ins, symtab)
+            elif op == "convolution":
+                out["flops"] += 2.0 * _shape_elems(ins.rtype) * 64  # approx
+            elif op in ELEMENTWISE:
+                out["flops"] += _shape_elems(ins.rtype)
+            # memory traffic: boundary tensors of top-level ops
+            if op not in SKIP_BYTES:
+                b = _shape_bytes(ins.rtype)
+                for a in ins.args.split(","):
+                    a = a.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                    if a in symtab:
+                        b += _shape_bytes(symtab[a])
+                out["bytes"] += b
+        cache[name] = out
+        return out
+
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m:
+        entry = m.group(1)
+    else:  # fall back to last computation
+        entry = list(comps)[-1] if comps else ""
+    return cost_of(entry)
+
+
+def top_collectives(hlo: str, n: int = 15):
+    """Largest collectives by trip-multiplied bytes: the perf-iteration
+    profile for collective-bound cells.  Returns
+    [(kind, result_type, trips, total_bytes, metadata_op_name)]."""
+    comps = parse_computations(hlo)
+    # computation -> multiplier (product of enclosing loop trips)
+    mult: Dict[str, int] = {}
+
+    def walk(name: str, m: int):
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        for ins in comps.get(name, []):
+            if ins.op == "while":
+                cond = re.search(r"condition=%?([\w.\-]+)",
+                                 ins.args + ins.attrs)
+                body = re.search(r"body=%?([\w.\-]+)", ins.args + ins.attrs)
+                trip = _trip_count(cond.group(1), comps) if cond else 1
+                if body:
+                    walk(body.group(1), m * trip)
+            else:
+                for mm_ in re.finditer(
+                        r"(?:calls=|to_apply=|body=|condition=)"
+                        r"%?([\w.\-]+)", ins.args + ins.attrs):
+                    if mm_.group(1) in comps:
+                        walk(mm_.group(1), m)
+
+    m0 = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    entry = m0.group(1) if m0 else (list(comps)[-1] if comps else "")
+    walk(entry, 1)
+
+    rows = []
+    for cname, instrs in comps.items():
+        mm_ = mult.get(cname, 0)
+        if not mm_:
+            continue
+        for ins in instrs:
+            base = re.sub(r"-(start|done)$", "", ins.op)
+            if base in COLLECTIVES and not ins.op.endswith("-done"):
+                b = _shape_bytes(ins.rtype)
+                meta = re.search(r'op_name="([^"]+)"', ins.attrs)
+                rows.append((base, ins.rtype.split("{")[0], mm_, mm_ * b,
+                             meta.group(1)[-80:] if meta else ""))
+    rows.sort(key=lambda r: -r[3])
+    return rows[:n]

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks (CPU wall time of the jitted XLA paths; the
+Pallas kernels are TPU-targeted and timed structurally via the roofline).
+
+Prints name,us_per_call,derived CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut_gemv, quant, typeconv
+from repro.kernels.lut_gemv import ref as lut_ref
+
+
+def timeit(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    print("\n# kernel microbench (XLA-on-CPU wall time)")
+    print("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+
+    # quantized matmul (jnp oracle path that serve_step lowers)
+    for bits in (2, 4, 8):
+        w = jax.random.normal(key, (1024, 1024))
+        qt = quant.quantize(w, bits, 128)
+        x = jax.random.normal(key, (8, 1024))
+        f = jax.jit(lambda x, qt=qt: lut_ref.lut_matmul_ref(x, qt))
+        us = timeit(f, x)
+        gmacs = 8 * 1024 * 1024 / (us * 1e-6) / 1e9
+        print(f"lut_matmul_q{bits}_8x1024x1024,{us:.1f},{gmacs:.2f} GMAC/s")
+
+    # faithful bit-serial LUT-GEMV
+    xq = jax.random.randint(key, (8, 1024), -127, 128, dtype=jnp.int32)
+    wq = jax.random.randint(key, (1024, 512), -8, 8, dtype=jnp.int32)
+    for nbw in (2, 4):
+        f = jax.jit(lambda x, w, nbw=nbw: lut_gemv.lut_gemv(x, w, nbw=nbw))
+        us = timeit(f, xq, wq)
+        print(f"bitserial_lut_gemv_nbw{nbw},{us:.1f},exact-int path")
+
+    # Algorithm 1 conversion
+    a = jax.random.randint(key, (65536,), -(1 << 24) + 1, 1 << 24,
+                           dtype=jnp.int32)
+    f = jax.jit(lambda a: typeconv.int_to_f32(a, 25))
+    us = timeit(f, a)
+    print(f"typeconv_int25_to_f32_64k,{us:.1f},"
+          f"{65536 / (us * 1e-6) / 1e6:.1f} Melem/s")
+
+    # activation quantization
+    x = jax.random.normal(key, (8, 4096))
+    f = jax.jit(lambda x: quant.quantize_activations(x, 8)[0])
+    us = timeit(f, x)
+    print(f"act_quant_8x4096,{us:.1f},-")
+
+
+if __name__ == "__main__":
+    main()

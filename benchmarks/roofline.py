@@ -1,0 +1,186 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Reads the JSONL records produced by ``repro.launch.dryrun`` and derives,
+per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / ICI_bw
+
+plus the dominant bottleneck, MODEL_FLOPS = 6*N*D (6*N_active*D for MoE),
+and the MODEL_FLOPS / HLO_FLOPs usefulness ratio (remat / redundancy /
+dispatch waste shows up here).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline runs/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Optional
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one new token per sequence
+    "long_500k": 1,
+}
+TRAIN_MULT = {"train_4k": 3.0}   # fwd + bwd
+
+
+def model_flops(arch: str, shape: str) -> Optional[float]:
+    """6*N*D (dense) / 6*N_active*D (MoE); 2*N*D for inference shapes."""
+    import repro.configs as C
+    try:
+        cfg = C.get_config(arch)
+    except ModuleNotFoundError:
+        return None
+    n = cfg.active_param_count()
+    toks = SHAPE_TOKENS[shape]
+    per_tok = 6.0 * n if shape in TRAIN_MULT else 2.0 * n
+    return per_tok * toks
+
+
+def analytic_hbm_bytes(arch: str, shape: str, mesh: str,
+                       quantize: bool = True, ql: int = 4) -> Optional[float]:
+    """Per-chip HBM bytes per step under TPU-grade fusion.
+
+    The parsed HLO byte count is an upper bound (the CPU backend
+    materializes elementwise chains a TPU would fuse), so the memory
+    roofline term uses this analytic model instead:
+
+      train   : params bf16 read (fwd+bwd) + grad f32 + Adam m/v r/w
+                + layer-boundary activations (save + reload) x remat reread
+      prefill : quantized params read + activation boundary traffic + KV out
+      decode  : quantized params + codebook scales + int8 KV cache read
+                + cache write + activation vectors  (the SAIL balance)
+    """
+    import repro.configs as C
+    from repro.launch import specs as sp
+    try:
+        cfg = C.get_config(arch)
+    except ModuleNotFoundError:
+        return None
+    n_chips = {"single": 256, "multi": 512}[mesh]
+    dp = {"single": 16, "multi": 32}[mesh]
+    s = sp.SHAPES[shape]
+    p_total = cfg.param_count()
+    p_active = cfg.active_param_count()
+    bpw = (ql / 8 + 4.0 / cfg.d_model) if quantize else 4.0  # + scales
+
+    if s["kind"] == "train":
+        b_loc = max(1, s["batch"] // dp)
+        p_shard = p_total / n_chips  # fsdp x tp shards, gathered per layer
+        weight_traffic = p_total / (n_chips / 1.0) * 2 * 3  # bf16, fwd+2 bwd
+        opt_traffic = p_shard * (4 + 2 * 8 + 8)  # grad + m,v rw + param rw
+        act = (cfg.n_layers * b_loc * s["seq"] * cfg.d_model * 2) * 4
+        return weight_traffic + opt_traffic + act
+    if s["kind"] == "prefill":
+        b_loc = max(1, s["batch"] // dp)
+        toks = b_loc * s["seq"]
+        weight_traffic = p_active * bpw / (n_chips / dp)  # TP shard read
+        act = cfg.n_layers * toks * cfg.d_model * 2 * 6
+        kv_out = (cfg.n_layers * toks * cfg.kv_dim * 2 * 1
+                  if cfg.family not in ("ssm",) else 0)
+        return weight_traffic + act + kv_out
+    # decode: one token for the whole (sharded) batch
+    b_loc = max(1, s["batch"] // dp)
+    weight_traffic = p_active * bpw / 16  # TP shard, read once per step
+    clen = sp.decode_cache_len(cfg, shape)
+    kv_bytes_pos = cfg.n_layers * cfg.kv_dim * (1 + 4 / cfg.head_dim)
+    kv_read = b_loc * min(clen, s["seq"]) * kv_bytes_pos * 2 / 16
+    act = b_loc * cfg.n_layers * cfg.d_model * 2 * 8
+    return weight_traffic + kv_read + act
+
+
+def analyze(records: List[dict], chips: Dict[str, int] = None):
+    chips = chips or {"single": 256, "multi": 512}
+    rows = []
+    for r in records:
+        if r.get("status") != "ok":
+            rows.append(dict(r, dominant=r.get("status")))
+            continue
+        n_chips = chips[r["mesh"]]
+        # prefer the trip-count-corrected parse (see hlo_cost.py); the raw
+        # cost_analysis numbers undercount scanned models
+        flops = r.get("flops_parsed", -1)
+        if flops is None or flops <= 0:
+            flops = r["flops_per_device"]
+        mem_bytes = r.get("bytes_parsed", -1)
+        if mem_bytes is None or mem_bytes <= 0:
+            mem_bytes = r["bytes_per_device"]
+        coll = r.get("coll_parsed", -1)
+        if coll is None or coll < 0:
+            coll = r["collective_total"]
+        hbm_model = analytic_hbm_bytes(r["arch"], r["shape"], r["mesh"],
+                                       r.get("quantize", True),
+                                       r.get("ql", 4))
+        t_comp = flops / PEAK_FLOPS
+        t_mem = (hbm_model if hbm_model else mem_bytes) / HBM_BW
+        t_coll = coll / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = flops * n_chips
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "hbm_bytes_model": hbm_model,
+            "bytes_parsed_upper": mem_bytes,
+            "flops_per_device": flops,
+            "coll_bytes": coll,
+            "spec_bytes_accessed": r.get("bytes_per_device"),
+            "spec_flops": r.get("flops_per_device"),
+            "model_flops": mf,
+            "useful_ratio": (mf / hlo_total) if mf and hlo_total > 0
+            else None,
+            "roofline_fraction": (
+                max(t_comp, 0.0) / max(t_comp, t_mem, t_coll, 1e-30)
+                if dominant != "compute" else 1.0),
+            "bound_time_s": max(terms.values()),
+        })
+    return rows
+
+
+def print_table(rows: List[dict]) -> None:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':6s} "
+           f"{'compute(s)':>11s} {'memory(s)':>11s} {'coll(s)':>10s} "
+           f"{'dominant':>10s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if "t_compute_s" not in r:
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+                  f"{'—':>11s} {'—':>11s} {'—':>10s} "
+                  f"{r.get('dominant', '?'):>10s}")
+            continue
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{r['t_compute_s']:11.4f} {r['t_memory_s']:11.4f} "
+              f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} {ur:>7s}")
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.jsonl"
+    records = [json.loads(l) for l in open(path)]
+    # keep the newest record per cell
+    seen = {}
+    for r in records:
+        seen[(r["arch"], r["shape"], r["mesh"],
+              r.get("quantize", True))] = r
+    rows = analyze(list(seen.values()))
+    print_table(rows)
+    out = path.replace(".jsonl", "_roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV blocks for the kernel microbench
+plus the machine-model reproductions of every SAIL table/figure.
+
+Run:  PYTHONPATH=src python -m benchmarks.run  [--skip-kernels]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as pt
+    pt.fig1_lut_vs_bitserial()
+    pt.table2_throughput()
+    pt.fig6_dse()
+    pt.fig9_speedup()
+    pt.fig10_table3_batch()
+    pt.fig12_breakdown()
+    pt.fig13_tpd()
+    pt.typeconv_cost()
+
+    if not args.skip_kernels:
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+
+    print("\nbenchmarks: done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quantization sensitivity sweep (the algorithm-level face of Fig. 9).
+
+Trains a small LM briefly, then quantizes it at every supported precision
+(Q2..Q8) and reports eval-loss degradation, weight compression, and the
+SAIL cost model's projected speedup at that precision — the quality/speed
+trade-off the ``ql`` instruction field exposes.
+
+Run:  PYTHONPATH=src python examples/quantize_and_eval.py
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core import cost_model as cm
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.models.sail_linear import QuantPolicy, quantize_params, nf_codebook
+from repro.optim.adamw import AdamW
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--train-steps", type=int, default=30)
+    ap.add_argument("--nf", action="store_true",
+                    help="use the non-uniform (normal-float) codebook")
+    args = ap.parse_args()
+
+    cfg = C.get_smoke(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    opt = AdamW(learning_rate=3e-3)
+    opt_state = opt.init(params)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                  global_batch=8))
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, batch, cfg), has_aux=True)(params)
+        upd, opt_state, _ = opt.update(g, opt_state, params)
+        return opt.apply(params, upd), opt_state, loss
+
+    for i in range(args.train_steps):
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, opt_state, loss = step(params, opt_state, batch)
+    print(f"trained {args.train_steps} steps, loss {float(loss):.3f}")
+
+    eval_batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+    base_loss = float(lm.loss_fn(params, eval_batch, cfg)[0])
+    print(f"\n{'ql':>3s} {'eval loss':>10s} {'delta':>8s} {'compress':>9s} "
+          f"{'SAIL 7B-proj tok/s':>18s}")
+    print(f"{'f32':>3s} {base_loss:10.4f} {'-':>8s} {'1.0x':>9s} {'-':>18s}")
+    for ql in (8, 6, 5, 4, 3, 2):
+        cb = nf_codebook(ql) if args.nf else None
+        qp, b0, b1 = quantize_params(
+            params, QuantPolicy(bits=ql, group_size=32, min_size=1024,
+                                codebook=cb))
+        qloss = float(lm.loss_fn(qp, eval_batch, cfg)[0])
+        proj = cm.sail_tokens_per_second(cm.LLAMA2_7B, ql, 16, 8)
+        print(f"Q{ql:>2d} {qloss:10.4f} {qloss-base_loss:+8.4f} "
+              f"{b0/b1:8.1f}x {proj:18.1f}")
+
+
+if __name__ == "__main__":
+    main()

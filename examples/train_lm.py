@@ -1,0 +1,90 @@
+"""End-to-end training driver: data pipeline -> sharded train step ->
+fault-tolerant loop with checkpointing and resume.
+
+Presets:
+  --preset tiny   (default) ~1M params, 60 steps — finishes in minutes on
+                  this CPU box and demonstrates loss going down;
+  --preset 100m   the assignment's "~100M model for a few hundred steps"
+                  configuration (what you'd run on a real slice);
+  --arch <id>     any registry architecture at smoke scale.
+
+Fault tolerance demo: run, Ctrl-C it mid-way, run again with the same
+--ckpt dir — it resumes from the last checkpoint (data state included).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import build_train_step
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.training.loop import TrainLoop, TrainLoopConfig
+
+
+def preset_cfg(name: str, arch: str) -> ModelConfig:
+    if name == "tiny":
+        return dataclasses.replace(C.get_smoke(arch), attn_chunk=64)
+    if name == "100m":
+        # ~100M-param llama-style model (the real driver config)
+        return ModelConfig(name="lm-100m", vocab=32000, d_model=640,
+                           n_layers=10, n_heads=10, n_kv=5, d_ff=1728,
+                           act="swiglu", max_seq=2048)
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = preset_cfg(args.preset, args.arch)
+    n_dev = len(jax.devices())
+    mesh = make_mesh((n_dev, 1), ("data", "model"))
+    print(f"training {cfg.name} on {n_dev} device(s)")
+
+    import repro.launch.specs as sp
+    sp_shapes = {"tokens": jax.ShapeDtypeStruct(
+        (args.batch, args.seq + 1), jnp.int32)}
+    built = build_train_step(cfg, mesh, bf16_compute=False)
+    # rebuild the jit against the example batch shape
+    step_fn = built.fn
+
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    opt = built.meta["optimizer"]
+    opt_state = opt.init(params)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"params: {n/1e6:.1f}M")
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch))
+    loop = TrainLoop(
+        step_fn=lambda p, o, b: step_fn(p, o, b),
+        params=params, opt_state=opt_state, data=data,
+        lcfg=TrainLoopConfig(total_steps=args.steps, log_every=5,
+                             checkpoint_every=20,
+                             checkpoint_dir=args.ckpt))
+    loop.install_signal_handlers()
+    if loop.maybe_restore():
+        print(f"resumed from step {loop.step}")
+    result = loop.run()
+    first = result["log"][0]["loss"] if result["log"] else float("nan")
+    last = result["log"][-1]["loss"] if result["log"] else float("nan")
+    print(f"done: step {result['final_step']}  loss {first:.3f} -> "
+          f"{last:.3f}")
+
+
+if __name__ == "__main__":
+    main()

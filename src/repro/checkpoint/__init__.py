@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, keep_last,
+                                         latest_step, restore, save)

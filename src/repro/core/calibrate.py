@@ -1,0 +1,106 @@
+"""Calibration of the SAIL analytic machine model against published anchors.
+
+The paper hard-codes characterized NDP cycle counts into gem5 (Sec. V-A);
+we recover the equivalent characterization by fitting the four dataflow
+constants the microarchitecture description does not pin down:
+
+  lookup cycles        L(wb) = a + b*wb      (DFM broadcast + SA read + add)
+  rebuild control      ctrl * (2/nbw)^eta    (per-group residency swap)
+  thread contention    tau                   (eff = 1/(1+tau*(T-1)))
+
+against:
+  * the three Fig. 6 anchor points (lutmm_1k tile, B=24):
+      (nbw=4, 2-bit) 3.00M cycles, (nbw=4, 4-bit) 4.87M, (nbw=2, 2-bit) 11.45M
+  * all 12 Table II SAIL cells at 1/16 threads (aggregate tokens/s,
+    batch 8 — the batch the paper identifies as balancing the pipeline).
+
+Run:  PYTHONPATH=src python -m repro.core.calibrate
+Prints the best-fit constants (already baked into SailMachine defaults)
+and the per-anchor residuals recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+
+import numpy as np
+
+from repro.core import cost_model as cm
+
+
+def fit(verbose: bool = True):
+    anchors_fig6 = cm.PAPER_FIG6_ANCHORS
+    t2 = cm.PAPER_TABLE_II
+
+    best = None
+    # coarse -> fine grid search (cheap: model is closed-form)
+    grids = [
+        dict(a=np.linspace(5, 60, 9), b=np.linspace(2, 30, 9),
+             ctrl=np.linspace(2e3, 3e4, 9), eta=np.linspace(1.2, 3.4, 8),
+             tau=np.linspace(0.0, 0.05, 6)),
+    ]
+    for _ in range(3):
+        g = grids[-1]
+        for a, b, ctrl, eta, tau in itertools.product(
+                g["a"], g["b"], g["ctrl"], g["eta"], g["tau"]):
+            m = cm.SailMachine(lookup_base_cycles=float(a),
+                               lookup_per_bit_cycles=float(b),
+                               rebuild_ctrl_cycles=float(ctrl),
+                               rebuild_nbw_exp=float(eta),
+                               thread_scale_tau=float(tau))
+            err = 0.0
+            for (bsz, nbw, wb), target in anchors_fig6.items():
+                got = cm.fig6_workload_cycles(bsz, nbw, wb, m)
+                err += 3.0 * math.log(got / target) ** 2
+            for (model_name, ql), cols in t2.items():
+                model = cm.LLAMA2_7B if model_name == "7b" else cm.LLAMA2_13B
+                for ti, threads in ((0, 1), (4, 16)):
+                    target = cols["sail"][ti]
+                    got = cm.sail_tokens_per_second(model, ql, threads,
+                                                    batch=8, machine=m)
+                    err += math.log(got / target) ** 2
+            if best is None or err < best[0]:
+                best = (err, dict(a=a, b=b, ctrl=ctrl, eta=eta, tau=tau))
+        # refine around the best point
+        c = best[1]
+        grids.append(dict(
+            a=np.linspace(max(1, c["a"] * 0.6), c["a"] * 1.5, 7),
+            b=np.linspace(max(0.5, c["b"] * 0.6), c["b"] * 1.5, 7),
+            ctrl=np.linspace(c["ctrl"] * 0.6, c["ctrl"] * 1.5, 7),
+            eta=np.linspace(max(0.8, c["eta"] - 0.5), c["eta"] + 0.5, 7),
+            tau=np.linspace(max(0.0, c["tau"] - 0.01), c["tau"] + 0.01, 5),
+        ))
+
+    err, c = best
+    m = cm.SailMachine(lookup_base_cycles=c["a"],
+                       lookup_per_bit_cycles=c["b"],
+                       rebuild_ctrl_cycles=c["ctrl"],
+                       rebuild_nbw_exp=c["eta"],
+                       thread_scale_tau=c["tau"])
+    if verbose:
+        print(f"best-fit constants: {c}  (sum sq log-err {err:.4f})")
+        print("\nFig. 6 anchors (model vs paper, Mcycles):")
+        for (bsz, nbw, wb), target in anchors_fig6.items():
+            got = cm.fig6_workload_cycles(bsz, nbw, wb, m)
+            print(f"  B={bsz} NBW={nbw} Q{wb}: {got/1e6:6.2f} vs {target/1e6:5.2f}"
+                  f"  ({got/target - 1:+.1%})")
+        print("\nTable II SAIL (model vs paper, tokens/s, batch=8):")
+        rows = []
+        for (model_name, ql), cols in sorted(t2.items()):
+            model = cm.LLAMA2_7B if model_name == "7b" else cm.LLAMA2_13B
+            for ti, threads in ((0, 1), (4, 16)):
+                target = cols["sail"][ti]
+                got = cm.sail_tokens_per_second(model, ql, threads, 8,
+                                                machine=m)
+                rows.append(got / target)
+                print(f"  {model_name}-Q{ql} {threads:2d}T: {got:7.2f} vs "
+                      f"{target:7.2f}  ({got/target - 1:+.1%})")
+        ratios = np.array(rows)
+        print(f"\n  geomean model/paper = {np.exp(np.mean(np.log(ratios))):.3f}"
+              f"  | mean abs err = {np.mean(np.abs(ratios - 1)):.1%}")
+    return m, err
+
+
+if __name__ == "__main__":
+    fit()

@@ -1,0 +1,156 @@
+"""Faithful batched LUT-based GEMV (SAIL Sec. II-C / III).
+
+This is the paper's algorithm implemented with *exact integer semantics* in
+pure JAX: lookup tables of weight subset-sums are built per NBW-sized group
+of the reduction dimension, and activation bits are processed LSB->MSB,
+each bit-plane's NBW-bit pattern indexing the LUT, with shift-and-add
+accumulation (Fig. 2 of the paper).
+
+The result is bit-exact equal to the integer matmul ``x_q @ w_q`` — this is
+the oracle property the tests assert.  The TPU production kernel
+(``repro.kernels.lut_gemv``) implements the hardware-adapted variant; this
+module is the algorithmic reference and the workload generator for the SAIL
+cost model.
+
+Conventions (following Fig. 2):
+  * A group holds ``nbw`` consecutive reduction-dim elements.
+  * LUT has ``2**nbw`` entries; bit ``j`` (LSB=j=0) of the entry index
+    selects weight ``nbw-1-j`` of the group, i.e. pattern ``0b001`` selects
+    the *last* weight of the group (W2 in the paper's [W0, W1, W2] example).
+  * Activations may be signed (two's complement): the MSB plane carries
+    weight ``-2**(abits-1)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def build_luts(w_q: jax.Array, nbw: int) -> jax.Array:
+    """Build weight subset-sum LUTs.
+
+    w_q : int32 [K, N] quantized weights (signed codes).
+    Returns LUTs int32 [K // nbw, 2**nbw, N] where
+      lut[g, p, n] = sum_{j : bit_j(p) = 1} w_q[g * nbw + (nbw - 1 - j), n].
+    """
+    k, n = w_q.shape
+    if k % nbw != 0:  # zero-pad: zero weights contribute nothing to sums
+        pad = nbw - k % nbw
+        w_q = jnp.concatenate([w_q, jnp.zeros((pad, n), w_q.dtype)], axis=0)
+        k += pad
+    groups = w_q.reshape(k // nbw, nbw, n)
+    patterns = jnp.arange(1 << nbw, dtype=jnp.int32)
+    # sel[p, i] = bit (nbw-1-i) of p  -> weight i of the group
+    sel = (patterns[:, None] >> (nbw - 1 - jnp.arange(nbw))) & 1  # [2^nbw, nbw]
+    # lut[g, p, n] = sum_i sel[p, i] * groups[g, i, n]
+    return jnp.einsum("pi,gin->gpn", sel, groups,
+                      preferred_element_type=jnp.int32)
+
+
+def activation_patterns(x_q: jax.Array, nbw: int, abits: int) -> jax.Array:
+    """Decompose activations into per-bit-plane LUT indices.
+
+    x_q : int32 [B, K] (signed, two's complement within ``abits``).
+    Returns patterns int32 [B, abits, K // nbw]: the NBW-bit index the DFM
+    broadcasts for (batch b, bit-plane t, group g).
+    """
+    b, k = x_q.shape
+    if k % nbw != 0:  # pad with zeros (pattern bits 0 -> LUT entry 0 term)
+        pad = nbw - k % nbw
+        x_q = jnp.concatenate([x_q, jnp.zeros((b, pad), x_q.dtype)], axis=1)
+        k += pad
+    ux = x_q.astype(jnp.uint32) & jnp.uint32((1 << abits) - 1)
+    bits = (ux[:, None, :] >> jnp.arange(abits, dtype=jnp.uint32)[None, :, None]) & 1
+    bits = bits.astype(jnp.int32)                                # [B, abits, K]
+    bits = bits.reshape(b, abits, k // nbw, nbw)
+    weights = (1 << (nbw - 1 - jnp.arange(nbw))).astype(jnp.int32)
+    return jnp.einsum("btgi,i->btg", bits, weights)              # [B, abits, K/nbw]
+
+
+@partial(jax.jit, static_argnames=("nbw", "abits", "signed"))
+def lut_gemv(x_q: jax.Array, w_q: jax.Array, nbw: int, abits: int = 8,
+             signed: bool = True) -> jax.Array:
+    """Batched LUT-GEMV: exact int32 ``x_q @ w_q`` via LUT + shift-add.
+
+    x_q : int32 [B, K] activations, |x| < 2**(abits-1) if signed.
+    w_q : int32 [K, N] weights.
+    Returns int32 [B, N].
+    """
+    luts = build_luts(w_q, nbw)                       # [G, 2^nbw, N]
+    pats = activation_patterns(x_q, nbw, abits)       # [B, abits, G]
+    g_idx = jnp.arange(luts.shape[0])
+    # gather LUT entries: out[b, t, g, n] = luts[g, pats[b,t,g], n]
+    fetched = luts[g_idx[None, None, :], pats]        # [B, abits, G, N]
+    planes = fetched.sum(axis=2)                      # [B, abits, N]
+    shifts = (1 << jnp.arange(abits, dtype=jnp.int32))
+    if signed:
+        # two's complement: MSB plane has weight -2^(abits-1)
+        shifts = shifts.at[abits - 1].set(-(1 << (abits - 1)))
+    return jnp.einsum("btn,t->bn", planes, shifts,
+                      preferred_element_type=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("nbw", "abits", "group_size"))
+def lut_gemv_quantized(x: jax.Array, w_q: jax.Array, w_scales: jax.Array,
+                       nbw: int, abits: int = 8,
+                       group_size: int = 128) -> jax.Array:
+    """End-to-end quantized GEMV: fp activations -> int LUT-GEMV -> dequant.
+
+    Matches the SAIL dataflow: activations are quantized per token (CPU
+    vector engine), the integer GEMV runs in C-SRAM via LUTs with per-group
+    partial sums, and dequantization applies ``scale_x * scale_w[group]``
+    per group before the final reduction (paper Fig. 3, step "CPU de-/quant").
+
+    x        : f32 [B, K]
+    w_q      : int32 [K, N] signed codes
+    w_scales : f32 [K // group_size, N]
+    Returns f32 [B, N] ~= x @ (w_q * scales-expanded).
+    """
+    from repro.core.quant import quantize_activations
+    b, k = x.shape
+    xq, xscale = quantize_activations(x, abits)
+    # per-group integer partial sums so group-wise weight scales are exact
+    luts = build_luts(w_q, nbw)                         # [G, 2^nbw, N]
+    pats = activation_patterns(xq, nbw, abits)          # [B, abits, G]
+    g_idx = jnp.arange(luts.shape[0])
+    fetched = luts[g_idx[None, None, :], pats]          # [B, abits, G, N]
+    shifts = (1 << jnp.arange(abits, dtype=jnp.int32))
+    shifts = shifts.at[abits - 1].set(-(1 << (abits - 1)))
+    psums = jnp.einsum("btgn,t->bgn", fetched, shifts,
+                       preferred_element_type=jnp.int32)  # [B, G(K/nbw), N]
+    # fold LUT groups into quant groups
+    per_q = group_size // nbw
+    gq = psums.shape[1] // per_q
+    psums = psums.reshape(b, gq, per_q, -1).sum(axis=2)   # [B, K/gs, N]
+    return jnp.einsum("bgn,gn->bn", psums.astype(jnp.float32), w_scales) * xscale
+
+
+def reference_int_gemv(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Plain integer matmul oracle."""
+    return jnp.einsum("bk,kn->bn", x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Workload statistics consumed by the cost model (cycle accounting inputs)
+# ---------------------------------------------------------------------------
+
+def lut_gemv_op_counts(batch: int, k: int, n: int, nbw: int, abits: int = 8):
+    """Count the abstract operations of one batched LUT-GEMV.
+
+    Returns a dict the cost model converts to C-SRAM cycles:
+      lut_builds   : number of (group) LUT constructions  = K/nbw per N-tile
+      lut_entries  : entries per LUT                       = 2^nbw
+      lookups      : total LUT reads = B * abits * K/nbw
+      shift_adds   : accumulations   = lookups
+    """
+    groups = k // nbw
+    return dict(
+        lut_builds=groups,
+        lut_entries=1 << nbw,
+        lookups=batch * abits * groups,
+        shift_adds=batch * abits * groups,
+        n_cols=n,
+    )

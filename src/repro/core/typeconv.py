@@ -1,0 +1,104 @@
+"""In-memory parallel type conversion (SAIL Algorithm 1).
+
+Converts n-bit signed integers (n <= 25) to IEEE-754 single-precision floats
+using only the logic operations available to bitline in-SRAM computing:
+cumulative OR for leading-one detection, a 5-bit ripple popcount for the
+exponent, and a bit-reversed multiply for mantissa alignment.  The JAX
+implementation below follows the algorithm line-by-line (vectorised across
+the array, the way 512 bitlines execute it in lockstep) and is bit-exact
+against ``astype(float32)`` for all |A| < 2**24 — the paper excludes NaN /
+subnormals (footnote 1) and we special-case zero, which the listing glosses.
+
+Also exported: the paper's cycle/op-count formulas
+    logic_ops(n)  = n^2 / 2 + 13 (n - 1)
+    sram_cycles(n)= 3 n^2 / 2 + 39 (n - 1)
+used by the cost model to price de-/quantization work done in C-SRAM instead
+of the CPU vector units.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def logic_ops(n: int) -> float:
+    """O(n^2/2 + 13(n-1)) logical operations (paper Sec. III-E)."""
+    return n * n / 2.0 + 13.0 * (n - 1)
+
+
+def sram_cycles(n: int) -> float:
+    """(3n^2/2 + 39(n-1)) in-SRAM cycles (paper Sec. III-E)."""
+    return 1.5 * n * n + 39.0 * (n - 1)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def int_to_f32(a: jax.Array, n: int = 25) -> jax.Array:
+    """Algorithm 1: n-bit signed int -> IEEE-754 float32, bitwise ops only.
+
+    a : int32 array, values representable in n bits (|a| < 2**(n-1), n<=25).
+    Returns float32 array bit-equal to ``a.astype(float32)``.
+    """
+    if not 2 <= n <= 25:
+        raise ValueError("Algorithm 1 requires 2 <= n <= 25")
+    a = a.astype(jnp.int32)
+    sign = (a >> 31) & 1                              # a_{n-1} (sign bit)
+    # work on the (n-1)-bit magnitude: the listing implicitly assumes
+    # sign-magnitude form, so take |A| with logic-compatible ops
+    mag = jnp.where(sign == 1, -a, a).astype(jnp.uint32)
+
+    nm1 = n - 1  # number of magnitude bits
+    # ---- lines 2-4: leading-one detection via cumulative OR -------------
+    # C gets 1s from the leading-one position down to bit 0
+    d = jnp.zeros_like(mag)
+    c = jnp.zeros_like(mag)
+    for i in range(nm1 - 1, -1, -1):
+        ai = (mag >> i) & 1
+        d = d | ai
+        c = c | (d << i)
+
+    # ---- lines 5-11: popcount(C) via 5-bit ripple counter ---------------
+    s = [jnp.zeros_like(mag) for _ in range(5)]       # Sum bits s0..s4
+    for i in range(nm1):
+        carry = (c >> i) & 1
+        for j in range(5):
+            c1 = s[j] & carry
+            s[j] = s[j] ^ carry
+            carry = c1
+    popc = sum(sj << j for j, sj in enumerate(s))     # = floor(log2 mag)+1
+    biased_exp = popc + 126                           # line 11
+
+    # ---- lines 16-17: mantissa alignment -------------------------------
+    # C+1 = 2^(p+1); the listing's "BitReverse over (n-1) bits then <<1"
+    # equals an n-bit reverse for p <= n-3 but is undefined when the leading
+    # one sits at the top magnitude bit (C+1 overflows n-1 bits).  An n-bit
+    # reverse is the exact equivalent covering that case too:
+    #   rev_n(2^(p+1)) = 2^(n-2-p) = 2^k, k = leading zeros of the magnitude
+    cp1 = c + 1                                       # up to 2^(n-1), fits n bits
+    rev = jnp.zeros_like(mag)
+    for i in range(n):
+        rev = rev | (((cp1 >> i) & 1) << (n - 1 - i))
+    mult = rev                                        # 2^k  (k = lead zeros)
+    aligned = (mag * mult) & jnp.uint32((1 << nm1) - 1)  # A * 2^k (line 17)
+
+    # ---- lines 12-15 / 18-20: assemble R --------------------------------
+    r = sign.astype(jnp.uint32) << 31
+    r = r | (biased_exp.astype(jnp.uint32) << 23)
+    # mantissa: bits a_{n-3..0} of aligned map to r_{22 .. 22-(n-3)}
+    if nm1 >= 2:
+        mant = (aligned & jnp.uint32((1 << (nm1 - 1)) - 1))  # drop hidden 1
+        mant_shift = 23 - (nm1 - 1)
+        r = r | (mant << mant_shift)
+    # zero is an exceptional case in the paper; handle explicitly
+    r = jnp.where(mag == 0, jnp.uint32(0), r)
+    return jax.lax.bitcast_convert_type(r, jnp.float32)
+
+
+def f32_to_int(x: jax.Array, n: int = 25) -> jax.Array:
+    """The 'straightforward other direction' (paper footnote): f32 -> intN.
+
+    Round-to-nearest-even truncation matching jnp.rint + clip to n bits.
+    """
+    lim = (1 << (n - 1)) - 1
+    return jnp.clip(jnp.rint(x), -lim - 1, lim).astype(jnp.int32)

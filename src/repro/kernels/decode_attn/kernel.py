@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: flash-decode attention over a quantized KV cache.
+
+The decode-phase hot loop the paper targets (Sec. III-B: the KV path maps
+column-wise across C-SRAM arrays so the Q x K_cache^T product streams
+without rebuilding LUTs).  On TPU the analogous structure is a
+flash-decoding kernel:
+
+  * grid walks (batch, kv-head, S blocks); KV blocks stream HBM->VMEM and
+    are consumed once (memory-bound, like the weight stream);
+  * int8 KV dequant (per-position scale) happens in VMEM right before the
+    MXU dot — KV HBM traffic drops 2x/4x vs bf16/f32, the same
+    bytes-are-the-bottleneck reasoning as LUT-GEMV;
+  * online softmax (running max / sum) keeps a single pass over the cache;
+  * GQA: the H/KV query heads of one kv group ride in the same block.
+
+Scratch: running (m, l, acc) in VMEM across the S-block grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, bs: int, n_s: int,
+                        quantized: bool, window, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                # [G, D] queries of group
+    k = k_ref[0, 0].astype(jnp.float32)            # [bs, D]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bs, D]
+    if quantized:
+        k = k * ks_ref[0, 0]                       # [bs, 1] scales
+        v = v * vs_ref[0, 0]
+
+    length = len_ref[0]
+    pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < length
+    if window is not None:
+        valid &= pos >= (length - window)
+
+    scores = jax.lax.dot_general(
+        q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # [G, bs]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]                                  # [G, 1]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                          # [G, bs]
+    p = jnp.where(valid, p, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "window", "quantized",
+                                             "interpret"))
+def decode_attention_pallas(q, k, v, lengths, k_scale=None, v_scale=None,
+                            *, bs: int = 256, window=None,
+                            quantized: bool = False, interpret: bool = True):
+    """q [B,H,D], k/v [B,S,KV,D] (+scales [B,S,KV,1]), lengths [B] -> [B,H,D].
+
+    S must be a multiple of bs (ops.py pads); D, G should be TPU-aligned.
+    """
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    n_s = s // bs
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, kv, g, d)
+    # layout KV as [B, KV, S, D] so the S-block stream is contiguous
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if quantized:
+        kst = jnp.swapaxes(k_scale, 1, 2).reshape(b, kv, s, 1)
+        vst = jnp.swapaxes(v_scale, 1, 2).reshape(b, kv, s, 1)
+    else:  # dummies (same layout, zero-size blocks are not allowed)
+        kst = jnp.zeros((b, kv, s, 1), jnp.float32)
+        vst = jnp.zeros((b, kv, s, 1), jnp.float32)
+
+    kernel = functools.partial(
+        _decode_attn_kernel, bs=bs, n_s=n_s, quantized=quantized,
+        window=window, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, si: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, bs, 1), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, bs, 1), lambda bi, hi, si: (bi, hi, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, kt, vt, kst, vst)
+    return out.reshape(b, h, d)

@@ -1,0 +1,39 @@
+"""Public wrapper for flash-decode attention (padding + jnp fallback)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attention_pallas
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
+                     window: Optional[int] = None,
+                     backend: str = "pallas", bs: int = 256,
+                     interpret: bool = True) -> jax.Array:
+    """Decode-step attention over a (possibly int8) KV cache.  See ref.py."""
+    if backend == "jnp":
+        return decode_attention_ref(q, k, v, lengths, k_scale, v_scale,
+                                    window)
+    b, h, d = q.shape
+    s = k.shape[1]
+    bs = min(bs, s)
+    if s % bs:
+        pad = bs - s % bs
+        padkv = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k, v = padkv(k), padkv(v)
+        if k_scale is not None:
+            k_scale, v_scale = padkv(k_scale), padkv(v_scale)
+    quantized = k_scale is not None
+    if quantized:
+        k = k.astype(jnp.int8) if k.dtype != jnp.int8 else k
+        v = v.astype(jnp.int8) if v.dtype != jnp.int8 else v
+    return decode_attention_pallas(
+        q, k, v, lengths.astype(jnp.int32), k_scale, v_scale, bs=bs,
+        window=window, quantized=quantized, interpret=interpret)

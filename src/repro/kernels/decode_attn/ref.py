@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the flash-decode attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array,
+                         k_scale: Optional[jax.Array] = None,
+                         v_scale: Optional[jax.Array] = None,
+                         window: Optional[int] = None) -> jax.Array:
+    """Single-token decode attention with a (possibly int8-quantized) KV
+    cache.
+
+    q        : [B, H, D]        query for the new token
+    k, v     : [B, S, KV, D]    cache (f32/bf16, or int8 when scales given)
+    lengths  : [B] int32        valid cache length per sequence
+    k_scale  : [B, S, KV, 1]    dequant scales for int8 KV (optional)
+    window   : sliding-window size (tokens attend to the last `window`
+               positions only) — h2o-danube / mixtral SWA.
+    Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    gsize = h // kv
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale
+    if v_scale is not None:
+        v = v.astype(jnp.float32) * v_scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    qg = q.reshape(b, kv, gsize, d).astype(jnp.float32)
+    scores = jnp.einsum("bgid,bsgd->bgis", qg, k) / jnp.sqrt(d)
+    pos = jnp.arange(s)[None, :]
+    valid = pos < lengths[:, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgis,bsgd->bgid", p, v)
+    return out.reshape(b, h, d)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: LUT-dequant quantized matmul (SAIL LUT-GEMV on TPU).
+
+TPU adaptation of the paper's C-SRAM LUT-GEMV (see DESIGN.md Sec. 2):
+
+  * packed b-bit weight codes stream HBM -> VMEM tile by tile (the DRAM ->
+    LLC ping-pong of Fig. 4 is Pallas' grid pipelining, which
+    double-buffers the next weight block against current compute);
+  * the 2**bits-entry dequant LUT (codebook) is VMEM-resident for the whole
+    kernel — built once, reused across every tile, batch row, and K-group,
+    which is the paper's central data-reuse property;
+  * unpack + LUT gather + group-scale happen entirely in VMEM, feeding the
+    MXU with an f32 tile — multiplications never touch the unquantized
+    weight in HBM, so HBM bytes drop by ~(16/bits)x exactly as C-SRAM
+    computing removes the LLC-external weight traffic.
+
+Grid: (M/bm, N/bn, K/bk) with K innermost (accumulation).  The packed
+operand is group-aligned (``pack_grouped``) so each K-block maps to an
+integer number of packed rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import values_per_word, words_per_group
+
+
+def _lut_matmul_kernel(x_ref, packed_ref, scales_ref, codebook_ref, o_ref,
+                       acc_ref, *, bits: int, group_size: int, bk: int,
+                       n_k: int, out_dtype):
+    """One (bm, bn) output tile; accumulates over the K grid dimension."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vpw = values_per_word(bits)
+    wpg = words_per_group(bits, group_size)
+    groups = bk // group_size
+    bn = packed_ref.shape[-1]
+
+    # ---- unpack b-bit codes from the packed uint32 block ----------------
+    words = packed_ref[...].reshape(groups, wpg, bn)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, None, :, None]
+    mask = jnp.uint32((1 << bits) - 1)
+    codes = (words[:, :, None, :] >> shifts) & mask      # [g, wpg, vpw, bn]
+    codes = codes.reshape(groups, wpg * vpw, bn)[:, :group_size, :]
+
+    # ---- LUT dequant: gather VMEM-resident codebook, apply group scale --
+    lut = codebook_ref[...]                               # [2**bits]
+    w = jnp.take(lut, codes.astype(jnp.int32), axis=0)    # [g, G, bn]
+    w = w * scales_ref[...][:, None, :]                   # group-wise scale
+    w = w.reshape(bk, bn)
+
+    # ---- MXU matmul, f32 accumulation -----------------------------------
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "k", "bm", "bn", "bk", "out_dtype", "interpret"))
+def lut_matmul_pallas(x, packed, scales, codebook, *, bits: int,
+                      group_size: int, k: int, bm: int = 8, bn: int = 256,
+                      bk: int = 512, out_dtype=jnp.float32,
+                      interpret: bool = True):
+    """y[M, N] = x[M, K] @ dequant(packed, scales, codebook).
+
+    All of M % bm, N % bn, K % bk, bk % group_size must be 0 (ops.py pads).
+    """
+    m, kx = x.shape
+    assert kx == k, (kx, k)
+    n = packed.shape[-1]
+    wpg = words_per_group(bits, group_size)
+    pk_rows = (bk // group_size) * wpg
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    kernel = functools.partial(
+        _lut_matmul_kernel, bits=bits, group_size=group_size, bk=bk,
+        n_k=n_k, out_dtype=out_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((pk_rows, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1 << bits,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scales, codebook)

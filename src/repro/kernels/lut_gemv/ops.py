@@ -1,0 +1,83 @@
+"""Jitted public wrapper for the LUT-dequant matmul kernel.
+
+Handles padding to block multiples, block-size selection (VMEM budgeting),
+and the jnp fallback used on non-TPU backends / inside the 512-device
+dry-run (same semantics as the kernel; the kernel itself is validated
+against ``ref.lut_matmul_ref`` in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, words_per_group
+from repro.kernels.lut_gemv.kernel import lut_matmul_pallas
+from repro.kernels.lut_gemv.ref import lut_matmul_ref
+
+VMEM_BUDGET = 64 * 2**20  # bytes; leave headroom below the 128MB v5e VMEM+
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pick_blocks(m: int, n: int, k: int, bits: int, group_size: int):
+    """Choose (bm, bn, bk) hardware-aligned and within the VMEM budget.
+
+    MXU wants multiples of (8, 128); the K block must cover whole quant
+    groups.  Working set per grid step ~ x(bm,bk)4 + packed + scales +
+    w_dequant(bk,bn)4 + acc(bm,bn)4, double-buffered (x2).
+    """
+    bm = min(_round_up(m, 8), 128)
+    bn = min(_round_up(n, 128), 512)
+    bk = min(_round_up(k, group_size), 2048)
+    wpg = words_per_group(bits, group_size)
+
+    def vmem(bm, bn, bk):
+        x = bm * bk * 4
+        pk = (bk // group_size) * wpg * bn * 4
+        sc = (bk // group_size) * bn * 4
+        w = bk * bn * 4
+        acc = bm * bn * 4
+        return 2 * (x + pk + sc) + w + acc
+
+    while vmem(bm, bn, bk) > VMEM_BUDGET and bk > group_size:
+        bk //= 2
+        bk = _round_up(bk, group_size)
+    while vmem(bm, bn, bk) > VMEM_BUDGET and bn > 128:
+        bn //= 2
+    return bm, bn, bk
+
+
+def lut_matmul(x: jax.Array, qt: QTensor, out_dtype=jnp.float32,
+               backend: str = "pallas", interpret: bool = True) -> jax.Array:
+    """y[M, N] = x[M, K] @ dequant(qt), the SAIL serving matmul.
+
+    backend: "pallas" (TPU kernel; interpret=True executes the kernel body
+    on CPU for validation) or "jnp" (pure-jnp same-semantics fallback).
+    """
+    if backend == "jnp":
+        return lut_matmul_ref(x, qt, out_dtype)
+    m, k = x.shape
+    n = qt.n
+    bm, bn, bk = pick_blocks(m, n, k, qt.bits, qt.group_size)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+
+    xx = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    packed, scales = qt.packed, qt.scales
+    if kp != k:
+        wpg = words_per_group(qt.bits, qt.group_size)
+        extra_g = (kp - k) // qt.group_size
+        packed = jnp.pad(packed, ((0, extra_g * wpg), (0, 0)))
+        scales = jnp.pad(scales, ((0, extra_g), (0, 0)))
+    if np_ != n:
+        packed = jnp.pad(packed, ((0, 0), (0, np_ - n)))
+        scales = jnp.pad(scales, ((0, 0), (0, np_ - n)),
+                         constant_values=1.0)
+
+    y = lut_matmul_pallas(xx, packed, scales, qt.codebook, bits=qt.bits,
+                          group_size=qt.group_size, k=kp, bm=bm, bn=bn,
+                          bk=bk, out_dtype=out_dtype, interpret=interpret)
+    return y[:m, :n]

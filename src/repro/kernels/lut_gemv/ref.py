@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the LUT-dequant quantized matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, dequantize
+
+
+def lut_matmul_ref(x: jax.Array, qt: QTensor,
+                   out_dtype=jnp.float32) -> jax.Array:
+    """y[M, N] = x[M, K] @ dequant(qt)[K, N] in f32 accumulation."""
+    w = dequantize(qt)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,8 @@
+"""Oracle for the Algorithm-1 type conversion kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def int_to_f32_ref(a: jax.Array) -> jax.Array:
+    """Native conversion — the ground truth Algorithm 1 must match."""
+    return a.astype(jnp.float32)

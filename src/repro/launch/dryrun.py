@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the
+# device count at first initialization).
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+(No ``from __future__`` import here: the XLA_FLAGS lines must stay first.)
+
+For every (architecture x input-shape) cell, lower + compile the step on
+the single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, record
+``memory_analysis()`` (fits?), ``cost_analysis()`` (FLOPs / bytes for the
+roofline), and the collective-bytes breakdown parsed from the compiled HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out runs/dryrun
+Options: --no-quant (baseline serving path), --ql N, --fsdp {auto,on,off}.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*(?:\([^)]*\)|\S+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(pred|[sufbc]\d+|bf16)\[([\d,]*)\]")
+
+
+def _op_output_bytes(line: str) -> int:
+    """Sum operand/result tensor bytes named on an HLO text line."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(line.split("=", 1)[0] or line):
+        n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims \
+            else 1
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+_COLL_LINE = re.compile(
+    r"=\s*(?P<rtype>.*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes moved by each collective kind, parsed from the compiled
+    (SPMD-partitioned, per-device) HLO: result-shape accounting — for
+    all-gather that is bytes received per device, for all-reduce /
+    reduce-scatter / all-to-all / permute the per-device payload."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        b = _op_output_bytes(m.group("rtype"))
+        base = m.group("op")
+        out[base] = out.get(base, 0) + b
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             quantize: bool = True, ql: int = 4,
+             fsdp: Optional[bool] = None, save_hlo: Optional[str] = None,
+             step_options: Optional[Dict[str, Any]] = None
+             ) -> Dict[str, Any]:
+    import repro.configs as C
+    from repro.launch import specs as sp
+    from repro.launch.mesh import make_production_mesh, describe
+    from repro.launch.steps import build_step
+
+    cfg = C.get_config(arch)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "quantize": quantize, "ql": ql}
+    if not sp.cell_is_runnable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("full-attention arch: 500k decode requires "
+                         "sub-quadratic attention (DESIGN.md)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        built = build_step(cfg, mesh, shape, quantize=quantize, ql=ql,
+                           fsdp=fsdp, **(step_options or {}))
+        with mesh:
+            lowered = built.fn.lower(*built.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+        # trip-count-aware reanalysis (XLA cost_analysis counts while-loop
+        # bodies once — see benchmarks/hlo_cost.py)
+        try:
+            from benchmarks.hlo_cost import analyze as hlo_analyze
+            parsed = hlo_analyze(hlo)
+        except Exception as e:  # keep the raw numbers if parsing breaks
+            parsed = {"flops": -1.0, "bytes": -1.0, "coll_bytes": -1.0,
+                      "error": str(e)}
+
+        rec.update(
+            status="ok",
+            mesh_desc=describe(mesh),
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops_per_device=float(cost.get("flops", -1)) if cost else -1,
+            bytes_per_device=float(cost.get("bytes accessed", -1))
+            if cost else -1,
+            collective_bytes=coll,
+            collective_total=int(sum(coll.values())),
+            flops_parsed=parsed.get("flops", -1.0),
+            bytes_parsed=parsed.get("bytes", -1.0),
+            coll_parsed=parsed.get("coll_bytes", -1.0),
+            coll_by_kind={k.replace("coll_", ""): v
+                          for k, v in parsed.items()
+                          if k.startswith("coll_") and k != "coll_bytes"},
+        )
+        if mem is not None:
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes",
+                      "peak_memory_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main() -> None:
+    import repro.configs as C
+    from repro.launch import specs as sp
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(sp.SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-quant", action="store_true",
+                    help="unquantized serving baseline")
+    ap.add_argument("--ql", type=int, default=4)
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+    archs = C.ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(sp.SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch.replace("_", "-") if False else arch,
+                               shape, mesh_kind,
+                               quantize=not args.no_quant, ql=args.ql,
+                               fsdp=fsdp, save_hlo=args.save_hlo)
+                results.append(rec)
+                line = json.dumps(rec)
+                print(line if rec["status"] != "error"
+                      else json.dumps({k: rec[k] for k in
+                                       ("arch", "shape", "mesh", "status",
+                                        "error")}))
+                if rec["status"] == "error":
+                    print(rec["traceback"])
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {err} errors "
+          f"/ {len(results)} cells")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+Shapes (assignment):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill_step
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288, global_batch 1     -> serve_step, sub-quadratic
+                                                 archs only (see DESIGN.md)
+
+Frontend stubs: whisper gets frame embeddings [B, S, D] (conv stub output),
+phi-3-vision gets 576 patch embeddings prepended to the text tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+# archs whose decode state is sub-quadratic (SWA window / recurrent state):
+LONG_CONTEXT_OK = {"h2o-danube-3-4b", "hymba-1.5b", "mixtral-8x7b",
+                   "xlstm-350m", "tinymistral-248m"}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.name in LONG_CONTEXT_OK or (
+            cfg.window is not None or cfg.family in ("ssm",))
+    return True
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the given cell's step inputs (no allocation)."""
+    s = SHAPES[shape]
+    seq, batch, kind = s["seq"], s["batch"], s["kind"]
+    d = cfg.d_model
+
+    if kind == "train":
+        if cfg.family == "encdec":
+            return {"frames": sds((batch, cfg.enc_seq, d), jnp.float32),
+                    "tokens": sds((batch, seq + 1), jnp.int32)}
+        b: Dict[str, Any] = {"tokens": sds((batch, seq + 1), jnp.int32)}
+        if cfg.frontend == "vision":
+            b["prefix_embeds"] = sds((batch, cfg.vision_tokens, d),
+                                     jnp.float32)
+        return b
+
+    if kind == "prefill":
+        if cfg.family == "encdec":
+            # encoder consumes the long sequence (longform audio)
+            return {"frames": sds((batch, seq, d), jnp.float32)}
+        b = {"tokens": sds((batch, seq), jnp.int32),
+             "lengths": sds((batch,), jnp.int32)}
+        if cfg.frontend == "vision":
+            b["prefix_embeds"] = sds((batch, cfg.vision_tokens, d),
+                                     jnp.float32)
+        return b
+
+    # decode: one token against a cache of `seq`
+    return {"tokens": sds((batch, 1), jnp.int32)}
+
+
+def decode_cache_len(cfg: ModelConfig, shape: str) -> int:
+    seq = SHAPES[shape]["seq"]
+    if cfg.family == "ssm":
+        return 0
+    if cfg.window is not None:
+        return min(seq, cfg.window)
+    return seq
+
+
+def cache_specs(cfg: ModelConfig, shape: str, quant_kv: bool = True):
+    """ShapeDtypeStructs for the decode cache (eval_shape over init_cache)."""
+    from repro.models import encdec, lm
+    batch = SHAPES[shape]["batch"]
+    clen = decode_cache_len(cfg, shape)
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            lambda: encdec.init_dec_cache(cfg, batch, max(clen, 1),
+                                          cfg.enc_seq, quant_kv))
+    return jax.eval_shape(
+        lambda: lm.init_cache(None, cfg, batch, max(clen, 1), quant_kv))

@@ -1,0 +1,260 @@
+"""Jitted, sharded step builders: train / prefill / decode(serve).
+
+Each builder returns (jit_fn, arg_shapes, in_shardings, out_shardings) so
+the dry-run can ``.lower(...).compile()`` against ShapeDtypeStructs and the
+real launchers can call the same object with live arrays.
+
+Serving steps run the SAIL path by default: weights SAIL-quantized
+(QTensor leaves, ql bits) and the KV cache int8 — the configuration the
+paper evaluates; ``quantize=False`` gives the unquantized baseline used
+for the §Perf before/after comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as sh
+from repro.models import encdec, lm
+from repro.models.common import ModelConfig
+from repro.models.sail_linear import QuantPolicy, quantize_params
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.launch import specs as sp
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                    # jitted function
+    args: tuple                # ShapeDtypeStruct pytrees (lower(*args))
+    in_shardings: tuple
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _cast_bf16(params):
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.bfloat16)
+        if (hasattr(p, "dtype") and p.dtype == jnp.float32 and p.ndim >= 2)
+        else p, params)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def auto_microbatches(cfg: ModelConfig, mesh: Mesh, shape: str,
+                      budget_bytes: float = 3e9) -> int:
+    """Grad-accumulation factor sized so the per-layer residual-stream
+    carries saved by the layer scan (n_layers x [B_local, T, D] bf16) fit
+    the activation budget — the dominant train-memory term after remat +
+    chunked CE (measured via dry-run memory analysis)."""
+    s = sp.SHAPES[shape]
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    b_local = max(1, s["batch"] // dp)
+    n_layers = cfg.n_layers + cfg.n_enc_layers
+    carries = n_layers * b_local * s["seq"] * cfg.d_model * 2
+    m = 1
+    while carries / m > budget_bytes and m < b_local:
+        m *= 2
+    return m
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     shape: str = "train_4k",
+                     fsdp: Optional[bool] = None,
+                     microbatches: Optional[int] = None,
+                     bf16_compute: bool = True,
+                     peak_lr: float = 3e-4,
+                     remat_policy: str = "full") -> BuiltStep:
+    plan = sh.make_plan(mesh, cfg, fsdp)
+    if microbatches is None:
+        microbatches = auto_microbatches(cfg, mesh, shape)
+    opt = AdamW(learning_rate=cosine_schedule(peak_lr, 100, 10000))
+
+    if cfg.family == "encdec":
+        base_loss = lambda p, b: encdec.loss_fn(p, b, cfg)
+        init = encdec.init_params
+    else:
+        base_loss = lambda p, b: lm.loss_fn(p, b, cfg)
+        init = lm.init_params
+
+    def loss_fn(params, batch):
+        # params arrive pre-cast (see train_step): the bf16 cast must sit
+        # OUTSIDE the microbatch scan or GSPMD all-gathers f32 master
+        # weights per micro-step (§Perf B2: 2x the FSDP gather bytes)
+        if bf16_compute and "prefix_embeds" in batch:
+            batch = dict(batch,
+                         prefix_embeds=batch["prefix_embeds"].astype(
+                             jnp.bfloat16))
+        return base_loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        # bf16 cast hoisted out of the microbatch scan (§Perf B2): FSDP
+        # all-gathers then move bf16 shards; d(cast)/dp = 1, so grads wrt
+        # the cast params are the grads wrt the masters.
+        fp = _cast_bf16(params) if bf16_compute else params
+        if microbatches > 1:
+            def micro(carry, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    fp, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32), carry, g)
+                return acc, (l, m["nll"])
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            grads, (ls, nlls) = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss, nll = ls.mean(), nlls.mean()
+        else:
+            (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                fp, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+            nll = m["nll"]
+        updates, opt_state, gnorm = opt.update(grads, opt_state, params)
+        params = opt.apply(params, updates)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "nll": nll.astype(jnp.float32),
+                   "grad_norm": gnorm.astype(jnp.float32),
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda: init(key, cfg))
+    o_shapes = jax.eval_shape(lambda: opt.init(p_shapes))
+    b_shapes = sp.input_specs(cfg, shape)
+
+    p_sh = sh.param_shardings(mesh, p_shapes, cfg, plan)
+    o_sh = type(o_shapes)(
+        step=NamedSharding(mesh, P()),
+        mu=sh.param_shardings(mesh, o_shapes.mu, cfg, plan),
+        nu=sh.param_shardings(mesh, o_shapes.nu, cfg, plan))
+    b_sh = sh.data_shardings(mesh, b_shapes, plan)
+    m_sh = jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()),
+                                  {"loss": 0., "nll": 0., "grad_norm": 0.,
+                                   "step": 0})
+
+    fn = jax.jit(train_step,
+                 in_shardings=(p_sh, o_sh, b_sh),
+                 out_shardings=(p_sh, o_sh, m_sh),
+                 donate_argnums=(0, 1))
+    return BuiltStep(fn=fn, args=(p_shapes, o_shapes, b_shapes),
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, m_sh),
+                     meta={"plan": plan, "optimizer": opt, "init": init,
+                           "kind": "train"})
+
+
+# ---------------------------------------------------------------------------
+# serving steps (SAIL path)
+# ---------------------------------------------------------------------------
+
+def _serve_params_shapes(cfg: ModelConfig, quantize: bool, ql: int):
+    key = jax.random.PRNGKey(0)
+    init = encdec.init_params if cfg.family == "encdec" else lm.init_params
+    p_shapes = jax.eval_shape(lambda: init(key, cfg))
+    if quantize:
+        policy = QuantPolicy(bits=ql)
+        p_shapes = jax.eval_shape(
+            lambda t: quantize_params(t, policy)[0], p_shapes)
+    return p_shapes
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                       shape: str = "prefill_32k", quantize: bool = True,
+                       ql: int = 4, quant_kv: bool = True) -> BuiltStep:
+    plan = sh.make_plan(mesh, cfg, fsdp=False)
+    seq = sp.SHAPES[shape]["seq"]
+    clen = max(sp.decode_cache_len(cfg, shape), 1)
+
+    if cfg.family == "encdec":
+        def prefill_step(params, batch):
+            return encdec.serve_prefill(params, batch["frames"], cfg,
+                                        cache_len=clen, quant_kv=quant_kv)
+    else:
+        def prefill_step(params, batch):
+            logits, cache = lm.prefill(
+                params, batch["tokens"], cfg, cache_len=clen,
+                quant_kv=quant_kv,
+                prefix_embeds=batch.get("prefix_embeds"),
+                lengths=batch.get("lengths"),
+                moe_mode="dispatch" if cfg.family == "moe" else "dense")
+            return logits, cache
+
+    p_shapes = _serve_params_shapes(cfg, quantize, ql)
+    b_shapes = sp.input_specs(cfg, shape)
+    p_sh = sh.param_shardings(mesh, p_shapes, cfg, plan)
+    b_sh = sh.data_shardings(mesh, b_shapes, plan)
+    out_shapes = jax.eval_shape(prefill_step, p_shapes, b_shapes)
+    if cfg.family == "encdec":
+        out_sh = sh.cache_shardings(mesh, out_shapes, plan)
+    else:
+        out_sh = (sh.data_shardings(mesh, out_shapes[0], plan),
+                  sh.cache_shardings(mesh, out_shapes[1], plan))
+
+    fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                 out_shardings=out_sh)
+    return BuiltStep(fn=fn, args=(p_shapes, b_shapes),
+                     in_shardings=(p_sh, b_sh), out_shardings=out_sh,
+                     meta={"plan": plan, "kind": "prefill",
+                           "cache_len": clen})
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, shape: str = "decode_32k",
+                     quantize: bool = True, ql: int = 4,
+                     quant_kv: bool = True) -> BuiltStep:
+    """One-token decode against a seq_len KV cache (the SAIL hot loop)."""
+    plan = sh.make_plan(mesh, cfg, fsdp=False)
+
+    if cfg.family == "encdec":
+        def serve_step(params, tokens, cache):
+            return encdec.serve_decode_step(params, tokens, cache, cfg,
+                                            quant_kv=quant_kv)
+    else:
+        def serve_step(params, tokens, cache):
+            return lm.decode_step(params, tokens, cache, cfg,
+                                  quant_kv=quant_kv, moe_mode="dense")
+
+    p_shapes = _serve_params_shapes(cfg, quantize, ql)
+    t_shapes = sp.input_specs(cfg, shape)["tokens"]
+    c_shapes = sp.cache_specs(cfg, shape, quant_kv)
+    p_sh = sh.param_shardings(mesh, p_shapes, cfg, plan)
+    t_sh = NamedSharding(mesh, sh._trim_spec(P(plan.dp, None),
+                                             t_shapes.shape, mesh))
+    c_sh = sh.cache_shardings(mesh, c_shapes, plan)
+    logits_shape = jax.ShapeDtypeStruct(
+        (t_shapes.shape[0], cfg.vocab), jnp.float32)
+    l_sh = NamedSharding(mesh, sh._trim_spec(P(plan.dp, plan.tp_axis),
+                                             logits_shape.shape, mesh))
+    fn = jax.jit(serve_step, in_shardings=(p_sh, t_sh, c_sh),
+                 out_shardings=(l_sh, c_sh), donate_argnums=(2,))
+    return BuiltStep(fn=fn, args=(p_shapes, t_shapes, c_shapes),
+                     in_shardings=(p_sh, t_sh, c_sh),
+                     out_shardings=(l_sh, c_sh),
+                     meta={"plan": plan, "kind": "decode"})
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, shape: str,
+               **kw) -> BuiltStep:
+    kind = sp.SHAPES[shape]["kind"]
+    if kind == "train":
+        allowed = {k: v for k, v in kw.items()
+                   if k in ("fsdp", "microbatches", "bf16_compute",
+                            "remat_policy")}
+        return build_train_step(cfg, mesh, shape, **allowed)
+    allowed = {k: v for k, v in kw.items()
+               if k in ("quantize", "ql", "quant_kv")}
+    if kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **allowed)
+    return build_serve_step(cfg, mesh, shape, **allowed)

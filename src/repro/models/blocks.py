@@ -1,0 +1,261 @@
+"""Decoder blocks for every architecture family, built scan-compatible:
+all layers of an arch share one pytree structure so the layer stack lowers
+as a single ``jax.lax.scan`` body (fast compile at 512 devices).
+
+xLSTM's heterogeneous stack (one sLSTM per ``slstm_every`` mLSTMs) is
+handled by scanning over homogeneous *super-blocks* of ``slstm_every``
+layers (unrolled inside the scan body).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import ModelConfig
+from repro.models.layers import (apply_attention, apply_mlp, apply_norm,
+                                 attention_init, mlp_init, norm_init)
+from repro.models.sail_linear import mm
+from repro.dist.sharding import maybe_constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig):
+    """One layer's params (stacked by the caller via vmap over keys)."""
+    ks = jax.random.split(key, 8)
+    if cfg.family == "ssm":  # xlstm super-block
+        n_in = cfg.slstm_every
+        sub_ks = jax.random.split(ks[0], n_in)
+        subs = []
+        for i in range(n_in):
+            kk = jax.random.split(sub_ks[i], 2)
+            if i == n_in - 1:  # last of the super-block is sLSTM
+                subs.append({"norm": norm_init(cfg),
+                             "slstm": xlstm_lib.slstm_init(kk[0], cfg)})
+            else:
+                subs.append({"norm": norm_init(cfg),
+                             "mlstm": xlstm_lib.mlstm_init(kk[0], cfg)})
+        return {"subs": subs}
+
+    p: Dict[str, Any] = {
+        "attn_norm": norm_init(cfg),
+        "attn": attention_init(ks[0], cfg),
+        "mlp_norm": norm_init(cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    if cfg.family == "hybrid":
+        p["ssm_norm"] = norm_init(cfg)
+        p["ssm"] = ssm_lib.ssm_init(ks[2], cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill: full sequence)
+# ---------------------------------------------------------------------------
+
+def block_apply_seq(p, x, cfg: ModelConfig, positions,
+                    moe_mode: str = "dispatch",
+                    collect_cache: bool = False):
+    """Full-sequence block.  Returns (x, aux_loss, cache_entries).
+
+    The output dtype always matches the input dtype (scan-carry stable
+    under bf16 mixed precision)."""
+    in_dtype = x.dtype
+    x = maybe_constrain(x, "batch", None, None)
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+
+    if cfg.family == "ssm":
+        for i, sub in enumerate(p["subs"]):
+            h = apply_norm(sub["norm"], x, cfg)
+            if "slstm" in sub:
+                if collect_cache:
+                    y, st = xlstm_lib.apply_slstm(sub["slstm"], h, cfg,
+                                                  return_state=True)
+                    cache[f"slstm_{i}"] = st
+                else:
+                    y = xlstm_lib.apply_slstm(sub["slstm"], h, cfg)
+            else:
+                if collect_cache:
+                    y, st = xlstm_lib.apply_mlstm(sub["mlstm"], h, cfg,
+                                                  return_state=True)
+                    cache[f"mlstm_{i}"] = st
+                else:
+                    y = xlstm_lib.apply_mlstm(sub["mlstm"], h, cfg)
+            x = (x + y).astype(in_dtype)
+        return x, aux, cache
+
+    # --- attention (+ parallel mamba for hybrid) -------------------------
+    h = apply_norm(p["attn_norm"], x, cfg)
+    attn_out = apply_attention(p["attn"], h, cfg, positions=positions,
+                               causal=True, window=cfg.window)
+    if collect_cache:
+        cache["kv"] = _kv_from_seq(p["attn"], h, cfg, positions)
+    if cfg.family == "hybrid":
+        hs = apply_norm(p["ssm_norm"], x, cfg)
+        if collect_cache:
+            ssm_out, st = ssm_lib.apply_ssm(p["ssm"], hs, cfg,
+                                            return_state=True)
+            cache["ssm"] = st
+        else:
+            ssm_out = ssm_lib.apply_ssm(p["ssm"], hs, cfg)
+        x = (x + 0.5 * (attn_out + ssm_out)).astype(in_dtype)
+    else:
+        x = (x + attn_out).astype(in_dtype)
+
+    # --- mlp / moe --------------------------------------------------------
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    if cfg.family == "moe":
+        y, aux = moe_lib.apply_moe(p["moe"], h, cfg, mode=moe_mode)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg)
+    x = (x + y).astype(in_dtype)
+    return x, aux, cache
+
+
+def _kv_from_seq(attn_p, h, cfg: ModelConfig, positions):
+    """Recompute K/V for the prefill cache (keys stored post-RoPE)."""
+    from repro.models.layers import apply_rope, _qk_norm
+    b, t, _ = h.shape
+    k = mm(h, attn_p["wk"]).reshape(b, t, cfg.n_kv, cfg.head_dim)
+    v = mm(h, attn_p["wv"]).reshape(b, t, cfg.n_kv, cfg.head_dim)
+    if cfg.qk_norm:
+        k = _qk_norm(k, attn_p["k_norm"]["scale"], cfg.norm_eps)
+    if cfg.pos == "rope":
+        k = apply_rope(k, positions, cfg)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, cache update)
+# ---------------------------------------------------------------------------
+
+def block_apply_decode(p, x, cfg: ModelConfig, layer_cache, position,
+                       cache_len: int, moe_mode: str = "dense",
+                       quant_kv: bool = False):
+    """One-token decode.  x: [B, 1, D]; position: [B] absolute positions.
+
+    layer_cache holds this layer's state (ring-buffered KV of size
+    ``cache_len``, ssm/xlstm states).  Returns (x, new_cache).
+    """
+    from repro.core.quant import quantize_kv
+    from repro.models.layers import apply_rope, _qk_norm
+    new_cache = dict(layer_cache)
+    in_dtype = x.dtype
+    b = x.shape[0]
+
+    if cfg.family == "ssm":
+        for i, sub in enumerate(p["subs"]):
+            h = apply_norm(sub["norm"], x, cfg)
+            if "slstm" in sub:
+                y, st = xlstm_lib.apply_slstm(
+                    sub["slstm"], h, cfg, state=layer_cache[f"slstm_{i}"],
+                    return_state=True)
+                new_cache[f"slstm_{i}"] = st
+            else:
+                y, st = xlstm_lib.apply_mlstm(
+                    sub["mlstm"], h, cfg, state=layer_cache[f"mlstm_{i}"],
+                    return_state=True)
+                new_cache[f"mlstm_{i}"] = st
+            x = (x + y).astype(in_dtype)
+        return x, new_cache
+
+    h = apply_norm(p["attn_norm"], x, cfg)
+    q = mm(h, p["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = mm(h, p["attn"]["wk"]).reshape(b, 1, cfg.n_kv, cfg.head_dim)
+    v = mm(h, p["attn"]["wv"]).reshape(b, 1, cfg.n_kv, cfg.head_dim)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["attn"]["q_norm"]["scale"], cfg.norm_eps)
+        k = _qk_norm(k, p["attn"]["k_norm"]["scale"], cfg.norm_eps)
+    if cfg.pos == "rope":
+        q = apply_rope(q, position[:, None], cfg)
+        k = apply_rope(k, position[:, None], cfg)
+
+    # ring-buffer write at position % cache_len
+    slot = (position % cache_len)[:, None, None, None]
+    if quant_kv:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        kc = _ring_write(layer_cache["k"], kq, slot)
+        vc = _ring_write(layer_cache["v"], vq, slot)
+        ksc = _ring_write(layer_cache["k_scale"], ks, slot)
+        vsc = _ring_write(layer_cache["v_scale"], vs, slot)
+        new_cache.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+        kf = kc.astype(jnp.float32) * ksc
+        vf = vc.astype(jnp.float32) * vsc
+    else:
+        kc = _ring_write(layer_cache["k"], k, slot)
+        vc = _ring_write(layer_cache["v"], v, slot)
+        new_cache.update(k=kc, v=vc)
+        kf, vf = kc, vc
+
+    attn_out = _decode_attend(q, kf, vf, position, cfg, cache_len)
+    attn_out = mm(attn_out.reshape(b, 1, cfg.q_dim), p["attn"]["wo"])
+
+    if cfg.family == "hybrid":
+        hs = apply_norm(p["ssm_norm"], x, cfg)
+        ssm_out, st = ssm_lib.apply_ssm(p["ssm"], hs, cfg,
+                                        state=layer_cache["ssm"],
+                                        return_state=True)
+        new_cache["ssm"] = st
+        x = (x + 0.5 * (attn_out + ssm_out)).astype(in_dtype)
+    else:
+        x = (x + attn_out).astype(in_dtype)
+
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    if cfg.family == "moe":
+        y, _ = moe_lib.apply_moe(p["moe"], h, cfg, mode=moe_mode)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg)
+    return (x + y).astype(in_dtype), new_cache
+
+
+def _ring_write(cache, val, slot):
+    """Scatter one token into the ring cache (in-place under donation).
+
+    cache [B, S, KV, D(or 1)], val [B, 1, KV, D], slot [B,1,1,1].
+    A batched dynamic-update (scatter) touches only the written slot —
+    bytes ~ O(B*KV*D), not O(B*S*KV*D) like a one-hot masked rewrite.
+    """
+    b = cache.shape[0]
+    idx = slot.reshape(b)
+    return cache.at[jnp.arange(b), idx].set(
+        val[:, 0].astype(cache.dtype), unique_indices=True,
+        indices_are_sorted=False)
+
+
+def _decode_attend(q, k, v, position, cfg: ModelConfig, cache_len: int):
+    """Attention of one query token over the ring cache.
+
+    q: [B, 1, H, Dh]; k, v: [B, S, KV, Dh] (f32).  Valid slots: those
+    holding positions in (pos - effective_window, pos]."""
+    b, _, hh, dh = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = hh // kv
+    qg = q.reshape(b, kv, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bghd,bsgd->bghs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+
+    # slot i currently holds absolute position: the largest p <= position
+    # with p % S == i  ->  valid iff that p > position - window and p >= 0
+    slots = jnp.arange(s)[None, :]                       # [1, S]
+    pos = position[:, None]                              # [B, 1]
+    cur_slot = pos % s
+    age = (cur_slot - slots) % s                         # 0 = newest
+    held = pos - age                                     # absolute position
+    window = cfg.window if cfg.window is not None else cache_len
+    valid = (held >= 0) & (held > pos - window)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bghs,bsgd->bghd", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, hh, dh).astype(q.dtype)

@@ -1,0 +1,223 @@
+"""Encoder-decoder model (whisper-large-v3 backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings [B, S_enc, D] (the output the two
+conv layers + GELU would produce).  Encoder: bidirectional attention,
+sinusoidal positions.  Decoder: causal self-attention (ring KV cache) +
+cross-attention to the encoder memory (computed once at prefill) + GELU
+MLP.  Whisper uses LayerNorm and attention biases.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import _ring_write, _decode_attend
+from repro.models.common import ModelConfig
+from repro.models.layers import (apply_attention, apply_mlp, apply_norm,
+                                 attention_init, dense_init, mlp_init,
+                                 norm_init, sinusoidal_positions, _qk_norm)
+from repro.models.sail_linear import mm
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn_norm": norm_init(cfg), "attn": attention_init(k1, cfg),
+                "mlp_norm": norm_init(cfg), "mlp": mlp_init(k2, cfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"self_norm": norm_init(cfg), "self_attn": attention_init(k1, cfg),
+                "cross_norm": norm_init(cfg), "cross_attn": attention_init(k2, cfg),
+                "mlp_norm": norm_init(cfg), "mlp": mlp_init(k3, cfg)}
+
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": dense_init(ks[2], (cfg.vocab, cfg.d_model)) * cfg.d_model ** 0.5,
+        "enc_blocks": jax.vmap(enc_layer)(enc_keys),
+        "enc_norm": norm_init(cfg),
+        "dec_blocks": jax.vmap(dec_layer)(dec_keys),
+        "dec_norm": norm_init(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: [B, S_enc, D] stubbed conv-frontend output -> memory."""
+    b, s, _ = frames.shape
+    x = frames + sinusoidal_positions(s, cfg.d_model)[None]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, p_l):
+        h = apply_norm(p_l["attn_norm"], x, cfg)
+        x = x + apply_attention(p_l["attn"], h, cfg, positions=positions,
+                                causal=False)
+        h = apply_norm(p_l["mlp_norm"], x, cfg)
+        return x + apply_mlp(p_l["mlp"], h, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def _cross_kv(p_l, memory, cfg):
+    b, s, _ = memory.shape
+    k = mm(memory, p_l["cross_attn"]["wk"]).reshape(b, s, cfg.n_kv,
+                                                    cfg.head_dim)
+    v = mm(memory, p_l["cross_attn"]["wv"]).reshape(b, s, cfg.n_kv,
+                                                    cfg.head_dim)
+    if cfg.attention_bias:
+        k = k + p_l["cross_attn"]["bk"].reshape(cfg.n_kv, cfg.head_dim)
+        v = v + p_l["cross_attn"]["bv"].reshape(cfg.n_kv, cfg.head_dim)
+    return k, v
+
+
+def decode_forward(params, tokens, memory, cfg: ModelConfig,
+                   return_hidden: bool = False):
+    """Teacher-forced decoder pass (training).  tokens [B, T]."""
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + sinusoidal_positions(t, cfg.d_model)[None]
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def body(x, p_l):
+        h = apply_norm(p_l["self_norm"], x, cfg)
+        x = x + apply_attention(p_l["self_attn"], h, cfg,
+                                positions=positions, causal=True)
+        h = apply_norm(p_l["cross_norm"], x, cfg)
+        x = x + apply_attention(p_l["cross_attn"], h, cfg,
+                                positions=positions, kv_x=memory)
+        h = apply_norm(p_l["mlp_norm"], x, cfg)
+        return x + apply_mlp(p_l["mlp"], h, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    x = apply_norm(params["dec_norm"], x, cfg)
+    if return_hidden:
+        return x
+    return x @ params["embed"].T          # whisper ties output to embedding
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch: {frames [B, S, D], tokens [B, T+1]}."""
+    from repro.models.lm import chunked_nll
+    x = decode_forward(params, batch["tokens"][:, :-1],
+                       encode(params, batch["frames"], cfg), cfg,
+                       return_hidden=True)
+    targets = batch["tokens"][:, 1:]
+    mask = jnp.ones_like(targets, jnp.float32)
+    nll = chunked_nll(x, params["embed"], targets, mask,
+                      transpose_head=True)
+    return nll, {"nll": nll}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_dec_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                   enc_seq: int, quant_kv: bool = False):
+    l = cfg.n_layers
+    kv = (l, batch, cache_len, cfg.n_kv, cfg.head_dim)
+    cache = {
+        "length": jnp.zeros((batch,), jnp.int32),
+        "layers": {
+            "k": jnp.zeros(kv, jnp.int8 if quant_kv else jnp.float32),
+            "v": jnp.zeros(kv, jnp.int8 if quant_kv else jnp.float32),
+            "ck": jnp.zeros((l, batch, enc_seq, cfg.n_kv, cfg.head_dim)),
+            "cv": jnp.zeros((l, batch, enc_seq, cfg.n_kv, cfg.head_dim)),
+        },
+    }
+    if quant_kv:
+        sc = (l, batch, cache_len, cfg.n_kv, 1)
+        cache["layers"]["k_scale"] = jnp.zeros(sc, jnp.float32)
+        cache["layers"]["v_scale"] = jnp.zeros(sc, jnp.float32)
+    return cache
+
+
+def serve_prefill(params, frames, cfg: ModelConfig, cache_len: int,
+                  quant_kv: bool = False):
+    """Encode audio, precompute cross-KV, return decode-ready cache."""
+    memory = encode(params, frames, cfg)
+    b = memory.shape[0]
+
+    def body(_, p_l):
+        k, v = _cross_kv(p_l, memory, cfg)
+        return None, {"ck": k, "cv": v}
+
+    _, cross = jax.lax.scan(body, None, params["dec_blocks"])
+    cache = init_dec_cache(cfg, b, cache_len, memory.shape[1], quant_kv)
+    cache["layers"]["ck"] = cross["ck"]
+    cache["layers"]["cv"] = cross["cv"]
+    return cache
+
+
+@partial(jax.jit, static_argnames=("cfg", "quant_kv"))
+def serve_decode_step(params, tokens, cache, cfg: ModelConfig,
+                      quant_kv: bool = False):
+    """One decoder token with self-KV ring cache + static cross-KV."""
+    from repro.core.quant import quantize_kv
+    b = tokens.shape[0]
+    position = cache["length"]
+    cache_len = cache["layers"]["k"].shape[2]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pe = sinusoidal_positions(cfg.max_seq, cfg.d_model)
+    x = x + pe[jnp.minimum(position, cfg.max_seq - 1)][:, None]
+
+    def body(x, inp):
+        p_l, cache_l = inp
+        new_cache_l = dict(cache_l)
+        h = apply_norm(p_l["self_norm"], x, cfg)
+        q = mm(h, p_l["self_attn"]["wq"]).reshape(b, 1, cfg.n_heads,
+                                                  cfg.head_dim)
+        k = mm(h, p_l["self_attn"]["wk"]).reshape(b, 1, cfg.n_kv,
+                                                  cfg.head_dim)
+        v = mm(h, p_l["self_attn"]["wv"]).reshape(b, 1, cfg.n_kv,
+                                                  cfg.head_dim)
+        slot = (position % cache_len)[:, None, None, None]
+        if quant_kv:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            kc = _ring_write(cache_l["k"], kq, slot)
+            vc = _ring_write(cache_l["v"], vq, slot)
+            ksc = _ring_write(cache_l["k_scale"], ks, slot)
+            vsc = _ring_write(cache_l["v_scale"], vs, slot)
+            new_cache_l.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+            kf = kc.astype(jnp.float32) * ksc
+            vf = vc.astype(jnp.float32) * vsc
+        else:
+            kc = _ring_write(cache_l["k"], k, slot)
+            vc = _ring_write(cache_l["v"], v, slot)
+            new_cache_l.update(k=kc, v=vc)
+            kf, vf = kc, vc
+        att = _decode_attend(q, kf, vf, position, cfg, cache_len)
+        x = x + mm(att.reshape(b, 1, cfg.q_dim), p_l["self_attn"]["wo"])
+
+        h = apply_norm(p_l["cross_norm"], x, cfg)
+        cq = mm(h, p_l["cross_attn"]["wq"]).reshape(b, 1, cfg.n_heads,
+                                                    cfg.head_dim)
+        g = cfg.n_heads // cfg.n_kv
+        qg = cq.reshape(b, cfg.n_kv, g, cfg.head_dim).astype(jnp.float32)
+        scores = jnp.einsum("bghd,bsgd->bghs", qg,
+                            cache_l["ck"].astype(jnp.float32))
+        scores = scores / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+        pa = jax.nn.softmax(scores, axis=-1)
+        cro = jnp.einsum("bghs,bsgd->bghd", pa,
+                         cache_l["cv"].astype(jnp.float32))
+        x = x + mm(cro.reshape(b, 1, cfg.q_dim).astype(x.dtype),
+                   p_l["cross_attn"]["wo"])
+
+        h = apply_norm(p_l["mlp_norm"], x, cfg)
+        return x + apply_mlp(p_l["mlp"], h, cfg), new_cache_l
+
+    x, new_layers = jax.lax.scan(body, x, (params["dec_blocks"],
+                                           cache["layers"]))
+    x = apply_norm(params["dec_norm"], x, cfg)
+    logits = (x @ params["embed"].T)[:, 0]
+    return logits, {"length": cache["length"] + 1, "layers": new_layers}

@@ -1,0 +1,326 @@
+"""Causal language model: init / train forward / prefill / decode.
+
+Layer stack lowers as one ``jax.lax.scan`` over stacked per-layer params
+(compile-time friendly at 512 devices); each scan body is rematerialized
+when cfg.remat.  Serving supports SAIL-quantized weights (QTensor leaves)
+and optionally int8-quantized ring-buffer KV caches.
+
+VLM (phi-3-vision) rides on the same class: ``prefix_embeds`` (the stubbed
+CLIP patch embeddings) are concatenated ahead of the token embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models.common import ModelConfig
+from repro.models.layers import dense_init, norm_init, apply_norm, \
+    sinusoidal_positions
+from repro.models.sail_linear import mm, QTensor, StackedQTensor
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def n_scan_blocks(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        assert cfg.n_layers % cfg.slstm_every == 0
+        return cfg.n_layers // cfg.slstm_every
+    return cfg.n_layers
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    k_embed, k_blocks, k_head, k_pos = jax.random.split(key, 4)
+    nb = n_scan_blocks(cfg)
+    block_keys = jax.random.split(k_blocks, nb)
+    blocks = jax.vmap(lambda k: blk.block_init(k, cfg))(block_keys)
+    p = {
+        "embed": dense_init(k_embed, (cfg.vocab, cfg.d_model)) * cfg.d_model ** 0.5,
+        "blocks": blocks,
+        "final_norm": norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab))
+    if cfg.pos == "learned":
+        p["pos_embed"] = dense_init(k_pos, (cfg.max_seq, cfg.d_model))
+    return p
+
+
+def _layer_slice(stacked, i):
+    """Slice layer i out of scan-stacked params (handles QTensor leaves)."""
+    return jax.tree_util.tree_map(lambda a: a[i], stacked)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig,
+                 prefix_embeds: Optional[jax.Array] = None,
+                 pos_offset: int = 0):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    t = x.shape[1]
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos_offset,
+                                             t, 0)[None]
+    elif cfg.pos == "sinusoidal":
+        x = x + sinusoidal_positions(pos_offset + t, cfg.d_model)[pos_offset:][None]
+    return x
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return mm(x, params["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# train / full-sequence forward
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: ModelConfig,
+            prefix_embeds: Optional[jax.Array] = None,
+            moe_mode: str = "dispatch"):
+    """tokens [B, T] -> (logits [B, T(+P), V], aux_loss)."""
+    x = embed_tokens(params, tokens, cfg, prefix_embeds)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def body(carry, p_l):
+        x = carry
+        y, aux, _ = blk.block_apply_seq(p_l, x, cfg, positions,
+                                        moe_mode=moe_mode)
+        return y, aux
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, auxs = jax.lax.scan(body_fn, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params, x, cfg), jnp.sum(auxs)
+
+
+def chunked_nll(x, head, targets, mask, chunk: int = 1024,
+                transpose_head: bool = False):
+    """Cross entropy without materializing full [B, T, V] logits.
+
+    Computes per-T-chunk logits -> (sum nll, sum count), each chunk
+    rematerialized so backward recomputes its logits instead of storing
+    them (the vocab-sized f32 logits were the largest buffers in the
+    dry-run memory analysis for V >= 32k).
+    """
+    b, t, d = x.shape
+    if t % chunk or t <= chunk:
+        return _nll_dense(x, head, targets, mask, transpose_head)
+    n = t // chunk
+    xc = jnp.moveaxis(x.reshape(b, n, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, n, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(carry, inp):
+        s, c = carry
+        xi, ti, mi = inp
+        si, ci = _nll_dense(xi, head, ti, mi, transpose_head,
+                            reduce_mean=False)
+        return (s + si, c + ci), None
+
+    (s, c), _ = jax.lax.scan(one, (jnp.zeros(()), jnp.zeros(())),
+                             (xc, tc, mc))
+    return s / jnp.maximum(c, 1.0)
+
+
+def _nll_dense(x, head, targets, mask, transpose_head,
+               reduce_mean: bool = True):
+    logits = (x @ head.T if transpose_head else mm(x, head)).astype(
+        jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    s = jnp.sum((logz - gold) * mask)
+    c = jnp.sum(mask)
+    if reduce_mean:
+        return s / jnp.maximum(c, 1.0)
+    return s, c
+
+
+def loss_fn(params, batch, cfg: ModelConfig, moe_mode: str = "dispatch",
+            aux_weight: float = 0.01):
+    """Next-token cross entropy.  batch: {tokens [B, T+1]} (+prefix)."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    x = embed_tokens(params, inputs, cfg, batch.get("prefix_embeds"))
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def body(carry, p_l):
+        y, aux, _ = blk.block_apply_seq(p_l, carry, cfg, positions,
+                                        moe_mode=moe_mode)
+        return y, aux
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, auxs = jax.lax.scan(body_fn, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    npfx = x.shape[1] - targets.shape[1]
+    if npfx:
+        x = x[:, npfx:]
+    mask = batch.get("mask", jnp.ones_like(targets, jnp.float32))
+    if cfg.tie_embeddings:
+        nll = chunked_nll(x, params["embed"], targets, mask,
+                          transpose_head=True)
+    else:
+        nll = chunked_nll(x, params["lm_head"], targets, mask)
+    aux = jnp.sum(auxs)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(params, cfg: ModelConfig, batch: int, cache_len: int,
+               quant_kv: bool = False) -> Dict[str, Any]:
+    """Allocate the stacked per-layer decode cache."""
+    from repro.models import ssm as ssm_lib
+    from repro.models import xlstm as xlstm_lib
+    nb = n_scan_blocks(cfg)
+    cache: Dict[str, Any] = {"length": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "ssm":
+        layers: Dict[str, Any] = {}
+        for i in range(cfg.slstm_every):
+            if i == cfg.slstm_every - 1:
+                st = xlstm_lib.init_slstm_state(cfg, batch)
+                layers[f"slstm_{i}"] = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (nb,) + a.shape), st)
+            else:
+                st = xlstm_lib.init_mlstm_state(cfg, batch)
+                layers[f"mlstm_{i}"] = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (nb,) + a.shape), st)
+        cache["layers"] = layers
+        return cache
+    kv_shape = (nb, batch, cache_len, cfg.n_kv, cfg.head_dim)
+    sc_shape = (nb, batch, cache_len, cfg.n_kv, 1)
+    layers = {
+        "k": jnp.zeros(kv_shape, jnp.int8 if quant_kv else jnp.float32),
+        "v": jnp.zeros(kv_shape, jnp.int8 if quant_kv else jnp.float32),
+    }
+    if quant_kv:
+        layers["k_scale"] = jnp.zeros(sc_shape, jnp.float32)
+        layers["v_scale"] = jnp.zeros(sc_shape, jnp.float32)
+    if cfg.family == "hybrid":
+        st = ssm_lib.init_ssm_state(cfg, batch)
+        layers["ssm"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (nb,) + a.shape), st)
+    cache["layers"] = layers
+    return cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int,
+            quant_kv: bool = False,
+            prefix_embeds: Optional[jax.Array] = None,
+            lengths: Optional[jax.Array] = None,
+            moe_mode: str = "dense"):
+    """Process the prompt, build the decode cache, return last logits.
+
+    tokens: [B, T] (right-padded).  lengths: [B] true prompt lengths.
+    """
+    from repro.core.quant import quantize_kv
+    b, t = tokens.shape
+    if lengths is None:
+        lengths = jnp.full((b,), t, jnp.int32)
+    x = embed_tokens(params, tokens, cfg, prefix_embeds)
+    tt = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(tt), (b, tt))
+
+    def body(x, p_l):
+        y, _, cache = blk.block_apply_seq(p_l, x, cfg, positions,
+                                          moe_mode=moe_mode,
+                                          collect_cache=True)
+        return y, cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = jax.lax.scan(body_fn, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    last = jnp.take_along_axis(
+        x, (lengths - 1 + (tt - t))[:, None, None], axis=1)
+    logits = lm_logits(params, last, cfg)[:, 0]
+
+    # assemble ring cache from collected per-layer entries
+    cache = init_cache(params, cfg, b, cache_len, quant_kv)
+    cache["length"] = lengths + (tt - t)
+    layers = dict(cache["layers"])
+    if cfg.family == "ssm":
+        for name, st in caches.items():
+            layers[name] = st
+    else:
+        kv = caches["kv"]
+        k_new, v_new = kv["k"], kv["v"]          # [L, B, T, KV, Dh]
+        pad = cache_len - tt
+        if pad >= 0:
+            padkv = lambda a: jnp.pad(
+                a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            k_new, v_new = padkv(k_new), padkv(v_new)
+        else:
+            k_new = k_new[:, :, -cache_len:]
+            v_new = v_new[:, :, -cache_len:]
+        if quant_kv:
+            kq, ks = quantize_kv(k_new)
+            vq, vs = quantize_kv(v_new)
+            layers.update(k=kq, v=vq, k_scale=ks, v_scale=vs)
+        else:
+            layers.update(k=k_new, v=v_new)
+        if cfg.family == "hybrid":
+            layers["ssm"] = caches["ssm"]
+    cache["layers"] = layers
+    return logits, cache
+
+
+@partial(jax.jit, static_argnames=("cfg", "quant_kv", "moe_mode"))
+def decode_step(params, tokens, cache, cfg: ModelConfig,
+                quant_kv: bool = False, moe_mode: str = "dense"):
+    """One decode step.  tokens [B, 1] -> (logits [B, V], new cache)."""
+    b = tokens.shape[0]
+    position = cache["length"]                   # absolute position of token
+    x = embed_tokens(params, tokens, cfg, pos_offset=0)
+    if cfg.pos == "learned":
+        x = jnp.take(params["embed"], tokens, axis=0) + \
+            params["pos_embed"][position][:, None]
+    cache_len = (cache["layers"]["k"].shape[2]
+                 if cfg.family != "ssm" else 0)
+
+    def body(x, inp):
+        p_l, cache_l = inp
+        y, new_cache_l = blk.block_apply_decode(
+            p_l, x, cfg, cache_l, position, cache_len,
+            moe_mode=moe_mode, quant_kv=quant_kv)
+        return y, new_cache_l
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"],
+                                           cache["layers"]))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params, x, cfg)[:, 0]
+    new_cache = {"length": cache["length"] + 1, "layers": new_layers}
+    return logits, new_cache
+
+
+def greedy_generate(params, prompt, cfg: ModelConfig, max_new: int,
+                    cache_len: Optional[int] = None,
+                    quant_kv: bool = False):
+    """Reference generation loop (serving engine uses its own)."""
+    b, t = prompt.shape
+    cache_len = cache_len or (t + max_new)
+    if cfg.window is not None:
+        cache_len = min(cache_len, cfg.window)
+    logits, cache = prefill(params, prompt, cfg, cache_len, quant_kv)
+    out = []
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    for _ in range(max_new):
+        out.append(tok)
+        logits, cache = decode_step(params, tok, cache, cfg, quant_kv)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+    return jnp.concatenate(out, axis=1)

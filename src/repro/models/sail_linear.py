@@ -1,0 +1,190 @@
+"""SailLinear: quantized-weight matmul dispatch, the framework's integration
+point for the paper's technique.
+
+Every weight matmul in the model goes through ``mm(x, w)``:
+  * training / unquantized serving: ``w`` is a plain array -> jnp.dot;
+  * SAIL serving: ``w`` is a ``QTensor`` (packed intN + group scales +
+    codebook LUT) -> the LUT-dequant matmul (Pallas kernel on TPU, its
+    same-semantics jnp form when lowering on CPU / inside the dry-run).
+
+``quantize_params`` converts a trained parameter tree into the SAIL serving
+format (the offline step the ``ql`` instruction field selects at runtime);
+embedding tables and 1-D params (norms, biases) stay in f32, mirroring the
+paper's mixed-precision outlier handling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, quantize, _uniform_codebook
+
+# Module-level backend switch: "jnp" (XLA path — used under pjit / dry-run)
+# or "pallas" (kernel path, interpret=True on CPU).
+_BACKEND = "jnp"
+
+
+def set_backend(backend: str) -> None:
+    global _BACKEND
+    assert backend in ("jnp", "pallas")
+    _BACKEND = backend
+
+
+def mm(x: jax.Array, w: Any) -> jax.Array:
+    """x [..., K] @ w [K, N] with QTensor dispatch."""
+    if isinstance(w, StackedQTensor) and w.packed.ndim == 2:
+        # a scan-sliced layer: reinterpret as a plain QTensor
+        w = QTensor(packed=w.packed, scales=w.scales,
+                    codebook=w.codebook, bits=w.bits,
+                    group_size=w.group_size, k=w.k)
+    if isinstance(w, QTensor):
+        from repro.kernels.lut_gemv.ops import lut_matmul
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = lut_matmul(x2, w, out_dtype=x.dtype if x.dtype != jnp.int32
+                       else jnp.float32, backend=_BACKEND)
+        return y.reshape(*lead, w.n)
+    return x @ w
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    bits: int = 4
+    group_size: int = 128
+    min_size: int = 65536          # don't quantize small tensors
+    skip_embed: bool = True        # gathers can't stream through LUT-GEMV
+    codebook: Optional[jax.Array] = None
+
+
+def _should_quantize(path: str, w, policy: QuantPolicy) -> bool:
+    if not hasattr(w, "ndim") or w.ndim != 2:
+        return False
+    if w.size < policy.min_size:
+        return False
+    if policy.skip_embed and ("embed" in path):
+        return False
+    if w.shape[0] % policy.group_size != 0:
+        return False
+    return True
+
+
+def quantize_params(params, policy: QuantPolicy = QuantPolicy()):
+    """Convert a parameter tree to the SAIL serving format.
+
+    Stacked weights — scan-stacked layers [L, K, N] and MoE experts
+    [L, E, K, N] — are quantized per slice (vmap over leading dims).
+    The codebook is tiled along the first leading dim so the whole
+    StackedQTensor can ride through ``lax.scan`` as an xs pytree.
+    Returns (quantized tree, bytes_before, bytes_after).
+    """
+    from repro.core.quant import pack_grouped
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    before = after = 0
+    out = []
+
+    def quantize_arrays(w2d, codebook):
+        k, n = w2d.shape
+        g = policy.group_size
+        wg = w2d.astype(jnp.float32).reshape(k // g, g, n)
+        scale = jnp.max(jnp.abs(wg), axis=1)
+        scale = jnp.where(scale == 0, 1.0, scale)
+        codes = jnp.argmin(
+            jnp.abs((wg / scale[:, None, :])[..., None] - codebook),
+            axis=-1).astype(jnp.uint32).reshape(k, n)
+        return pack_grouped(codes, policy.bits, g), scale
+
+    for path, w in flat:
+        pstr = jax.tree_util.keystr(path)
+        before += w.size * w.dtype.itemsize
+        if _should_quantize(pstr, w, policy):
+            qt = quantize(w, policy.bits, policy.group_size,
+                          codebook=policy.codebook)
+            after += qt.nbytes()
+            out.append(qt)
+        elif (hasattr(w, "ndim") and w.ndim >= 3
+              and "embed" not in pstr
+              and w.shape[-2] % policy.group_size == 0
+              and w.shape[-2] * w.shape[-1] >= policy.min_size):
+            lead = w.shape[:-2]
+            k, n = w.shape[-2:]
+            codebook = (policy.codebook if policy.codebook is not None
+                        else _uniform_codebook(policy.bits)).astype(
+                jnp.float32)
+            flat_w = w.reshape((-1, k, n))
+            qfn = jax.vmap(lambda a: quantize_arrays(a, codebook))
+            packed, scales = qfn(flat_w)
+            packed = packed.reshape(lead + packed.shape[1:])
+            scales = scales.reshape(lead + scales.shape[1:])
+            stacked = StackedQTensor(
+                packed=packed, scales=scales,
+                codebook=jnp.tile(codebook[None], (lead[0], 1)),
+                bits=policy.bits, group_size=policy.group_size, k=k)
+            after += packed.size * 4 + scales.size * 4
+            out.append(stacked)
+        else:
+            after += w.size * w.dtype.itemsize
+            out.append(w)
+    return jax.tree_util.tree_unflatten(treedef, out), before, after
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StackedQTensor:
+    """QTensor stacked along a leading axis (scan layers / MoE experts)."""
+    packed: jax.Array      # [E, (K//G)*wpg, N]
+    scales: jax.Array      # [E, K//G, N]
+    codebook: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(metadata=dict(static=True))
+
+    def __getitem__(self, i):
+        cb = self.codebook if self.codebook.ndim == 1 else self.codebook[i]
+        return QTensor(packed=self.packed[i], scales=self.scales[i],
+                       codebook=cb, bits=self.bits,
+                       group_size=self.group_size, k=self.k)
+
+    @property
+    def n(self):
+        return self.packed.shape[-1]
+
+    @property
+    def shape(self):
+        """Logical (unquantized) weight shape."""
+        lead = self.packed.shape[:-2]
+        return lead + (self.k, self.packed.shape[-1])
+
+
+def dequantize_any(w):
+    """Array | QTensor | StackedQTensor -> f32 array (oracle path)."""
+    from repro.core.quant import dequantize, unpack_grouped
+    if isinstance(w, QTensor):
+        return dequantize(w)
+    if isinstance(w, StackedQTensor):
+        cb = w.codebook if w.codebook.ndim == 1 else w.codebook[0]
+
+        def one(packed, scales):
+            codes = unpack_grouped(packed, w.bits, w.group_size, w.k)
+            vals = cb[codes].reshape(
+                w.k // w.group_size, w.group_size, -1)
+            return (vals * scales[:, None, :]).reshape(w.k, -1)
+
+        if w.packed.ndim == 2:
+            return one(w.packed, w.scales)
+        lead = w.packed.shape[:-2]
+        flat_p = w.packed.reshape((-1,) + w.packed.shape[-2:])
+        flat_s = w.scales.reshape((-1,) + w.scales.shape[-2:])
+        out = jax.vmap(one)(flat_p, flat_s)
+        return out.reshape(lead + out.shape[-2:])
+    return w
+
+
+def einsum_q(spec: str, x: jax.Array, w: Any) -> jax.Array:
+    """einsum where w may be stacked-quantized (MoE expert einsums)."""
+    if isinstance(w, (QTensor, StackedQTensor)):
+        w = dequantize_any(w).astype(x.dtype)
+    return jnp.einsum(spec, x, w)

@@ -1,0 +1,120 @@
+"""Selective SSM (Mamba-style) branch for the hymba hybrid architecture.
+
+Hymba (arXiv:2411.13676) runs attention heads and mamba heads *in parallel*
+within each block, summing their (normalized) outputs.  This module
+implements the mamba branch: in-projection -> short causal conv ->
+selective SSM (input-dependent B, C, dt; diagonal A) -> out-projection.
+
+Sequence processing uses an associative scan over the diagonal recurrence
+h_t = a_t * h_{t-1} + b_t (parallel in T, the TPU-friendly form); decode
+carries (conv window, ssm state) in the cache — O(1) per token, which is
+why hymba runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sail_linear import mm
+from repro.dist.sharding import maybe_constrain
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # [B, conv_k - 1, inner]
+    h: jax.Array      # [B, inner, d_state]
+
+
+def ssm_inner(cfg: ModelConfig) -> int:
+    return int(cfg.ssm_expand * cfg.d_model * (
+        cfg.hybrid_ratio if cfg.family == "hybrid" else 1.0))
+
+
+def ssm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    d, n = cfg.d_model, cfg.ssm_state
+    inner = ssm_inner(cfg)
+    dt_rank = max(1, d // 16)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * inner)),        # x and gate z
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, inner), fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((inner,)),
+        "w_bcdt": dense_init(ks[2], (inner, 2 * n + dt_rank)),
+        "w_dt": dense_init(ks[3], (dt_rank, inner), fan_in=dt_rank),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (inner,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (inner, 1))),           # [inner, n]
+        "d_skip": jnp.ones((inner,)),
+        "w_out": dense_init(ks[5], (inner, d), fan_in=inner),
+    }
+
+
+def _conv_causal(x, w, b, state: Optional[jax.Array] = None):
+    """Depthwise causal conv along T.  x: [B, T, C]; w: [K, C]."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b, xp[:, -(k - 1):, :]
+
+
+def _ssm_scan(a, bx, h0):
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + bx_t via
+    associative scan.  a, bx: [B, T, inner, n]."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    a_, b_ = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return a_ * h0[:, None] + b_   # fold in initial state
+
+
+def apply_ssm(p, x, cfg: ModelConfig,
+              state: Optional[SSMState] = None,
+              return_state: bool = False):
+    """x: [B, T, D] -> [B, T, D] (+ updated SSMState)."""
+    b, t, d = x.shape
+    n = cfg.ssm_state
+    inner = p["w_in"].shape[-1] // 2
+    dt_rank = p["w_bcdt"].shape[-1] - 2 * n
+
+    xz = mm(x, p["w_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)                     # [B, T, inner]
+    conv_state = state.conv if state is not None else None
+    xs, new_conv = _conv_causal(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    xs = maybe_constrain(xs, "batch", None, "model")
+    bcdt = mm(xs, p["w_bcdt"])
+    bmat, cmat, dtr = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    dt = jax.nn.softplus(mm(dtr, p["w_dt"]) + p["dt_bias"])  # [B, T, inner]
+    a = -jnp.exp(p["a_log"])                              # [inner, n]
+
+    dt = maybe_constrain(dt, "batch", None, "model")
+    da = jnp.exp(dt[..., None] * a)                       # [B, T, inner, n]
+    da = maybe_constrain(da, "batch", None, "model", None)
+    dbx = dt[..., None] * bmat[:, :, None, :] * xs[..., None]
+    h0 = state.h if state is not None else jnp.zeros((b, inner, n))
+    dbx = maybe_constrain(dbx, "batch", None, "model", None)
+    h = _ssm_scan(da, dbx, h0)                            # [B, T, inner, n]
+    h = maybe_constrain(h, "batch", None, "model", None)
+    y = jnp.einsum("btin,btn->bti", h, cmat) + xs * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = mm(y, p["w_out"])
+    if return_state:
+        return out, SSMState(conv=new_conv, h=h[:, -1])
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    inner = ssm_inner(cfg)
+    return SSMState(conv=jnp.zeros((batch, cfg.ssm_conv - 1, inner)),
+                    h=jnp.zeros((batch, inner, cfg.ssm_state)))

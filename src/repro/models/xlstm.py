@@ -1,0 +1,189 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+xlstm-350m alternates mLSTM blocks with an sLSTM block every
+``cfg.slstm_every`` layers.  Both are O(1)-state recurrences, so decode at
+500k context carries only (C, n, m) — the reason this arch runs the
+long_500k shape.
+
+mLSTM: per head, matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T with
+exponential gating stabilized by the max-tracker m_t; output h_t =
+(C_t q_t) / max(|n_t^T q_t|, 1).  Training uses a jax.lax.scan over T
+(recurrent form); the chunkwise-parallel form is a further optimization
+documented in EXPERIMENTS.md.
+
+sLSTM: scalar memory per head-channel with exponential gating.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sail_linear import mm
+from repro.dist.sharding import maybe_constrain
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # [B, H, Dh, Dh]
+    n: jax.Array   # [B, H, Dh]
+    m: jax.Array   # [B, H]
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B, D]
+    n: jax.Array   # [B, D]
+    m: jax.Array   # [B, D]
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    inner = int(cfg.ssm_expand * d)
+    h = cfg.n_heads
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * inner)),        # x and gate
+        "w_q": dense_init(ks[1], (inner, inner)),
+        "w_k": dense_init(ks[2], (inner, inner)),
+        "w_v": dense_init(ks[3], (inner, inner)),
+        "w_if": dense_init(ks[4], (inner, 2 * h)),        # i, f gate logits
+        "w_down": dense_init(ks[5], (inner, d), fan_in=inner),
+    }
+
+
+def _chunked_scan(step, init, xs, chunk: int = 128):
+    """lax.scan with sqrt-style rematerialization: the outer scan saves
+    carries only at chunk boundaries; inner chunks recompute in backward.
+    Without this, training saves the [B,H,Dh,Dh] matrix memory at every
+    timestep (O(T) x state — hundreds of GB at seq 4096)."""
+    t = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if t <= chunk or t % chunk != 0:
+        return jax.lax.scan(step, init, xs)
+    n = t // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys = jax.lax.scan(chunk_body, init, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((t,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, state: Optional[MLSTMState] = None,
+                return_state: bool = False):
+    b, t, d = x.shape
+    inner = p["w_q"].shape[-1]
+    h = cfg.n_heads
+    dh = inner // h
+
+    up = mm(x, p["w_up"])
+    xs, z = jnp.split(up, 2, axis=-1)
+    q = mm(xs, p["w_q"]).reshape(b, t, h, dh) / (dh ** 0.5)
+    k = mm(xs, p["w_k"]).reshape(b, t, h, dh) / (dh ** 0.5)
+    v = mm(xs, p["w_v"]).reshape(b, t, h, dh)
+    v = maybe_constrain(v, "batch", None, None, "model")
+    gates = mm(xs, p["w_if"])                                 # [B, T, 2H]
+    ig, fg = jnp.split(gates, 2, axis=-1)                  # log-space gates
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh))
+        n0 = jnp.zeros((b, h, dh))
+        m0 = jnp.full((b, h), -jnp.inf)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, it, ft = inp                           # [B,H,Dh]x3, [B,H]
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        fda = jnp.exp(logf + jnp.where(jnp.isfinite(m), m, -jnp.inf) - m_safe)
+        ida = jnp.exp(it - m_safe)
+        c = fda[..., None, None] * c + ida[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])           # [B,H,Dh,Dh]
+        n = fda[..., None] * n + ida[..., None] * kt
+        hn = jnp.einsum("bhij,bhj->bhi", c, qt)
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt)), 1.0)
+        out = hn / denom[..., None]
+        return (c, n, m_new), out
+
+    xs_t = lambda a: jnp.moveaxis(a, 1, 0)
+    (c, n, m), outs = _chunked_scan(
+        step, (c0, n0, m0),
+        (xs_t(q), xs_t(k), xs_t(v),
+         xs_t(ig.reshape(b, t, h)), xs_t(fg.reshape(b, t, h))))
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, t, inner)
+    y = y * jax.nn.silu(z)
+    out = mm(y, p["w_down"])
+    if return_state:
+        return out, MLSTMState(c=c, n=n, m=m)
+    return out
+
+
+def slstm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    return {
+        "w_z": dense_init(ks[0], (d, d)),
+        "w_i": dense_init(ks[1], (d, d)),
+        "w_f": dense_init(ks[2], (d, d)),
+        "w_o": dense_init(ks[3], (d, d)),
+        "w_down": dense_init(ks[4], (d, d)),
+    }
+
+
+def apply_slstm(p, x, cfg: ModelConfig, state: Optional[SLSTMState] = None,
+                return_state: bool = False):
+    b, t, d = x.shape
+    zt = jnp.tanh(mm(x, p["w_z"]))
+    it = mm(x, p["w_i"])
+    ft = mm(x, p["w_f"])
+    ot = jax.nn.sigmoid(mm(x, p["w_o"]))
+
+    if state is None:
+        c0, n0 = jnp.zeros((b, d)), jnp.zeros((b, d))
+        m0 = jnp.full((b, d), -jnp.inf)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        z_, i_, f_, o_ = inp
+        logf = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(logf + m, i_)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        fda = jnp.exp(logf + jnp.where(jnp.isfinite(m), m, -jnp.inf) - m_safe)
+        ida = jnp.exp(i_ - m_safe)
+        c = fda * c + ida * z_
+        n = fda * n + ida
+        out = o_ * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), out
+
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    (c, n, m), outs = _chunked_scan(step, (c0, n0, m0),
+                                    (mv(zt), mv(it), mv(ft), mv(ot)))
+    y = mm(jnp.moveaxis(outs, 0, 1), p["w_down"])
+    if return_state:
+        return y, SLSTMState(c=c, n=n, m=m)
+    return y
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    inner = int(cfg.ssm_expand * cfg.d_model)
+    dh = inner // cfg.n_heads
+    return MLSTMState(c=jnp.zeros((batch, cfg.n_heads, dh, dh)),
+                      n=jnp.zeros((batch, cfg.n_heads, dh)),
+                      m=jnp.full((batch, cfg.n_heads), -jnp.inf))
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    return SLSTMState(c=jnp.zeros((batch, cfg.d_model)),
+                      n=jnp.zeros((batch, cfg.d_model)),
+                      m=jnp.full((batch, cfg.d_model), -jnp.inf))

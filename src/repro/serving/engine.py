@@ -1,0 +1,149 @@
+"""Batched serving engine — the paper's tensor-level scheduling in system
+form (Sec. III-A).
+
+Iteration-based serving: each engine step runs ONE model iteration for the
+whole active batch, so every layer's weights are streamed once per
+iteration and reused across all users (weight temporal locality — on TPU
+that reuse happens in VMEM; the analytic LLC model lives in
+core/scheduler.py).  Slots freed by finished requests are back-filled from
+the waiting queue at iteration granularity.
+
+Runs the SAIL path: weights SAIL-quantized (QTensor), KV cache optionally
+int8.  The engine is deliberately synchronous and deterministic —
+production async wrappers (request queues, streaming) belong to the RPC
+layer, not the execution engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import IterationScheduler, Request
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.models.sail_linear import QuantPolicy, quantize_params
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_size: int = 8            # the pipeline-balancing batch (paper: 8)
+    cache_len: int = 4096
+    quantize: bool = True
+    ql: int = 4
+    group_size: int = 128
+    quant_kv: bool = True
+    min_size: int = 1024           # quantize tensors >= this many elements
+    eos_token: int = -1            # -1: never stop early
+    temperature: float = 0.0       # 0 = greedy
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    latency_s: float
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        if ecfg.quantize:
+            self.params, b0, b1 = quantize_params(
+                params, QuantPolicy(bits=ecfg.ql,
+                                    group_size=ecfg.group_size,
+                                    min_size=ecfg.min_size))
+            self.compression = b0 / max(b1, 1)
+        else:
+            self.params, self.compression = params, 1.0
+        self.sched = IterationScheduler(target_batch=ecfg.batch_size,
+                                        max_batch=ecfg.batch_size)
+        self._uid = 0
+        self.completions: Dict[int, Completion] = {}
+        self._gen: Dict[int, List[int]] = {}
+        self._t0: Dict[int, float] = {}
+        self.iterations = 0
+
+    # --- client API -------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int) -> int:
+        self._uid += 1
+        self.sched.submit(Request(uid=self._uid, prompt_len=len(prompt),
+                                  max_new_tokens=max_new_tokens))
+        self._gen[self._uid] = list(prompt)
+        self._t0[self._uid] = time.time()
+        return self._uid
+
+    def run(self) -> List[Completion]:
+        """Serve until all submitted requests finish."""
+        while not self.sched.idle():
+            self._serve_batch()
+        return list(self.completions.values())
+
+    # --- internals ----------------------------------------------------------
+    def _serve_batch(self) -> None:
+        batch = self.sched.admit()
+        if not batch:
+            return
+        ecfg, cfg = self.ecfg, self.cfg
+        b = len(batch)
+        maxlen = max(r.prompt_len for r in batch)
+        toks = np.zeros((b, maxlen), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for i, r in enumerate(batch):
+            p = self._gen[r.uid][:r.prompt_len]
+            toks[i, :len(p)] = p
+            lengths[i] = len(p)
+        clen = ecfg.cache_len if cfg.window is None \
+            else min(ecfg.cache_len, cfg.window)
+        logits, cache = lm.prefill(
+            self.params, jnp.asarray(toks), cfg, cache_len=clen,
+            quant_kv=ecfg.quant_kv, lengths=jnp.asarray(lengths))
+        cur = self._sample(logits)
+        # iteration loop: one decode step serves the whole batch
+        active = list(batch)
+        steps = max(r.max_new_tokens for r in batch)
+        done_at: Dict[int, int] = {}
+        for step in range(steps):
+            for i, r in enumerate(active):
+                if r.uid not in done_at:
+                    self._gen[r.uid].append(int(cur[i]))
+                    if (int(cur[i]) == ecfg.eos_token or
+                            step + 1 >= r.max_new_tokens):
+                        done_at[r.uid] = step
+            self.iterations += 1
+            if len(done_at) == len(active) or step == steps - 1:
+                break
+            logits, cache = lm.decode_step(
+                self.params, cur[:, None], cache, cfg,
+                quant_kv=ecfg.quant_kv)
+            cur = self._sample(logits)
+        for r in active:
+            gen = self._gen[r.uid][r.prompt_len:]
+            self.completions[r.uid] = Completion(
+                uid=r.uid, tokens=gen,
+                latency_s=time.time() - self._t0[r.uid])
+        self.sched.step_complete([r.uid for r in active])
+        # mark any remaining (shouldn't happen in sync mode)
+        self.sched.running = [r for r in self.sched.running
+                              if r.uid not in self.completions]
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.ecfg.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        key = jax.random.PRNGKey(self.iterations)
+        return np.asarray(jax.random.categorical(
+            key, logits / self.ecfg.temperature, axis=-1))
+
+    def stats(self) -> Dict[str, Any]:
+        lats = [c.latency_s for c in self.completions.values()]
+        toks = sum(len(c.tokens) for c in self.completions.values())
+        return {"requests": len(self.completions),
+                "generated_tokens": toks,
+                "iterations": self.iterations,
+                "weight_compression": round(self.compression, 2),
+                "mean_latency_s": float(np.mean(lats)) if lats else 0.0}

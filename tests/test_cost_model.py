@@ -1,0 +1,100 @@
+"""SAIL machine model vs the paper's published numbers (the reproduction's
+quantitative validation — tolerances reflect the calibration residuals
+recorded in EXPERIMENTS.md)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import pattern
+
+
+def test_fig6_anchor_points():
+    """Fig. 6 anchors within the documented calibration band (<=2.5x is a
+    failure; fitted residuals are ~20-40%)."""
+    for (b, nbw, wb), target in cm.PAPER_FIG6_ANCHORS.items():
+        got = cm.fig6_workload_cycles(b, nbw, wb)
+        assert 0.4 < got / target < 2.0, ((b, nbw, wb), got, target)
+
+
+def test_fig6_qualitative_shape():
+    """Cycle count decreases with batch amortization and the NBW=2 rebuild
+    penalty exceeds NBW=4 at 2-bit (paper's stated trade-off)."""
+    c_small = cm.fig6_workload_cycles(1, 4, 2)
+    c_big = cm.fig6_workload_cycles(24, 4, 2)
+    assert c_big < c_small * 24  # sublinear in batch (LUT reuse)
+    assert (cm.fig6_workload_cycles(24, 2, 2) >
+            cm.fig6_workload_cycles(24, 4, 2))
+
+
+def test_table2_sail_fit():
+    ratios = []
+    for (mn, ql), cols in cm.PAPER_TABLE_II.items():
+        model = cm.LLAMA2_7B if mn == "7b" else cm.LLAMA2_13B
+        got = cm.sail_tokens_per_second(model, ql, 16, 8)
+        ratios.append(got / cols["sail"][4])
+    g = math.exp(np.mean(np.log(ratios)))
+    assert 0.75 < g < 1.25, g
+    assert np.mean(np.abs(np.array(ratios) - 1)) < 0.25
+
+
+def test_table2_baseline_fit():
+    errs = []
+    for (mn, ql), cols in cm.PAPER_TABLE_II.items():
+        model = cm.LLAMA2_7B if mn == "7b" else cm.LLAMA2_13B
+        errs.append(abs(cm.arm_tokens_per_second(model, ql, 1, 8) /
+                        cols["arm"][0] - 1))
+        errs.append(abs(cm.amx_tokens_per_second(model, ql, 16, 8) /
+                        cols["amx"][4] - 1))
+    assert np.mean(errs) < 0.25, np.mean(errs)
+
+
+def test_fig12_breakdown():
+    bd = cm.gemv_breakdown()
+    base = bd["baseline"]
+    assert base / bd["lut_tc"] == pytest.approx(3.81, rel=0.12)
+    # staircase ordering: baseline > NC > LUT > LUT+TC
+    assert bd["baseline"] > bd["neural_cache"] > bd["lut"] > bd["lut_tc"]
+
+
+def test_fig1_shape():
+    """LUT gain grows with batch; bit-serial wins at batch 1 (LUT build
+    unamortized) — the crossover the paper's Fig. 1 shows."""
+    g1 = cm.fig1_efficiency_gain(2, 1)
+    g32 = cm.fig1_efficiency_gain(2, 32)
+    assert g32 > g1
+    assert g32 > 1.5
+
+
+def test_speedup_headlines():
+    """Paper headline: up to ~10.4x over ARM (13B-Q2)."""
+    best = max(
+        cm.sail_tokens_per_second(cm.LLAMA2_13B, ql, 16, 8) /
+        cm.arm_tokens_per_second(cm.LLAMA2_13B, ql, 16, 8)
+        for ql in (2, 3, 4))
+    assert best > 5.0
+
+
+def test_tpd():
+    tpd = cm.tokens_per_dollar(100.0, "cpu_16c")
+    assert tpd == pytest.approx(100 * 30 * 24 * 3600 / 665.45)
+
+
+def test_lut_overhead_contradiction_documented():
+    """The paper says LUT build is 3% at (B8, NBW2, Q2) yet attributes
+    11.45M cycles at NBW=2 to 'rebuild overhead' — mutually inconsistent.
+    We follow the Fig. 6 anchors; this test pins the chosen behaviour."""
+    frac = cm.lut_build_fraction(cm.SailMachine(), 8, 2, 2)
+    assert frac > 0.2  # anchor-consistent, NOT the 3% prose figure
+
+
+def test_pattern_discount():
+    assert pattern.cycle_discount(0.17) == pytest.approx(1 - 0.138, rel=0.01)
+    assert pattern.cycle_discount(0.0) == 1.0
+
+
+def test_best_nbw_in_range():
+    for ql in (2, 4, 8):
+        nbw = cm.best_nbw(cm.LLAMA2_7B, ql, 16, 8)
+        assert 1 <= nbw <= 4

@@ -1,0 +1,129 @@
+"""Distribution: sharding rules, multi-device pjit step, compressed
+all-reduce — multi-device cases run in a subprocess with 8 fake host
+devices (the main process must keep 1 device for the smoke tests)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_param_spec_rules():
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import Plan, param_spec
+    import repro.configs as C
+    cfg = C.get_smoke("llama3_2_1b")
+    plan = Plan(dp_axes=("data",), fsdp=True)
+    assert param_spec("['blocks']['attn']['wq']", (2, 64, 128), cfg,
+                      plan) == P(None, "data", "model")
+    assert param_spec("['blocks']['attn']['wo']", (2, 128, 64), cfg,
+                      plan) == P(None, "model", "data")
+    assert param_spec("['embed']", (256, 64), cfg, plan) == P("model", None)
+    assert param_spec("['final_norm']['scale']", (64,), cfg, plan) == P(None)
+
+
+def test_multi_device_train_step():
+    res = run_subprocess(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        import repro.configs as C
+        from repro.launch.mesh import make_mesh
+        from repro.launch.steps import build_train_step
+        from repro.models import lm
+        from repro.launch import specs as sp
+
+        cfg = C.get_smoke("llama3_2_1b")
+        mesh = make_mesh((4, 2), ("data", "model"))
+        built = build_train_step(cfg, mesh, bf16_compute=False)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        opt = built.meta["optimizer"]
+        opt_state = opt.init(params)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (8, 4097), 0, cfg.vocab)}
+        with mesh:
+            p, o, m = built.fn(params, opt_state, batch)
+            p, o, m2 = built.fn(p, o, batch)
+        print(json.dumps({"loss0": float(m["loss"]),
+                          "loss1": float(m2["loss"]),
+                          "devices": len(jax.devices())}))
+    """))
+    assert res["devices"] == 8
+    assert np.isfinite(res["loss0"])
+    assert res["loss1"] < res["loss0"]  # one update helped on same batch
+
+
+def test_compressed_allreduce():
+    res = run_subprocess(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.dist.compress import (init_error_state,
+                                         make_compressed_allreduce)
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((8,), ("data",))
+        grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 64)),
+                 "b": jax.random.normal(jax.random.PRNGKey(1), (8, 4))}
+        specs = {"w": P("data", None), "b": P("data", None)}
+        err = init_error_state(grads)
+        fn = make_compressed_allreduce(mesh, ("data",), specs)
+        # per-shard mean across data axis == original (each shard reduces
+        # to itself x8 /8); instead check error-feedback convergence on a
+        # replicated tensor: simulate by repeating the same grad
+        same = {"w": jnp.tile(grads["w"][:1], (8, 1)),
+                "b": jnp.tile(grads["b"][:1], (8, 1))}
+        with mesh:
+            mean1, err1 = fn(same, err)
+            mean2, err2 = fn(same, err1)
+        exact = same
+        e1 = float(jnp.abs(mean1["w"] - exact["w"]).max())
+        # accumulated two-step average error shrinks with feedback
+        acc = (np.asarray(mean1["w"]) + np.asarray(mean2["w"])) / 2
+        e2 = float(np.abs(acc - np.asarray(exact["w"])).max())
+        scale = float(jnp.abs(exact["w"]).max())
+        print(json.dumps({"e1": e1 / scale, "e2": e2 / scale}))
+    """))
+    assert res["e1"] < 0.02          # int8 single-step error bound
+    assert res["e2"] <= res["e1"] + 1e-6  # feedback does not diverge
+
+
+def test_serve_step_multi_device():
+    res = run_subprocess(textwrap.dedent("""
+        import json, dataclasses, jax, jax.numpy as jnp, numpy as np
+        import repro.configs as C
+        from repro.launch.mesh import make_mesh
+        from repro.dist import sharding as sh
+        from repro.models import lm
+        from repro.models.sail_linear import QuantPolicy, quantize_params
+
+        cfg = C.get_smoke("qwen3_0_6b")
+        mesh = make_mesh((4, 2), ("data", "model"))
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        qp, _, _ = quantize_params(params, QuantPolicy(bits=4,
+                                                       group_size=32,
+                                                       min_size=1024))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0,
+                                  cfg.vocab)
+        with mesh:
+            logits, cache = lm.prefill(qp, toks, cfg, cache_len=16,
+                                       quant_kv=True)
+            l2, cache = lm.decode_step(qp, toks[:, :1], cache, cfg,
+                                       quant_kv=True)
+        print(json.dumps({"finite": bool(np.isfinite(np.asarray(l2)).all()),
+                          "shape": list(l2.shape)}))
+    """))
+    assert res["finite"] and res["shape"] == [4, 256]

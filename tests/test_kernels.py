@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.kernels.decode_attn import ops as da_ops, ref as da_ref
+from repro.kernels.lut_gemv import ops as lut_ops, ref as lut_ref
+from repro.kernels.typeconv import ops as tc_ops
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 8])
+@pytest.mark.parametrize("mkn", [(8, 256, 128), (3, 130, 70), (16, 512, 384),
+                                 (1, 64, 512)])
+def test_lut_matmul_sweep(bits, mkn):
+    m, k, n = mkn
+    gs = 64
+    kk = -(-k // gs) * gs
+    w = jax.random.normal(jax.random.PRNGKey(bits), (kk, n))
+    qt = quant.quantize(w, bits, gs)
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, kk))
+    y = lut_ops.lut_matmul(x, qt, backend="pallas", interpret=True)
+    y_ref = lut_ref.lut_matmul_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lut_matmul_dtypes(dtype):
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 128))
+    qt = quant.quantize(w, 4, 128)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256)).astype(dtype)
+    y = lut_ops.lut_matmul(x, qt, out_dtype=dtype, backend="pallas")
+    y_ref = lut_ref.lut_matmul_ref(x, qt, out_dtype=dtype)
+    assert y.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_lut_matmul_nf_codebook():
+    from repro.core.quant import nf_codebook
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 64))
+    qt = quant.quantize(w, 4, 64, codebook=nf_codebook(4))
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 256))
+    y = lut_ops.lut_matmul(x, qt, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(lut_ref.lut_matmul_ref(x, qt)),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [8, 16, 25])
+def test_typeconv_kernel(n):
+    lim = 1 << (n - 1)
+    vals = np.random.default_rng(n).integers(
+        -lim + 1, lim, size=777).astype(np.int32)
+    out = tc_ops.int_to_f32(jnp.asarray(vals), n=n, backend="pallas")
+    assert (np.asarray(out) == vals.astype(np.float32)).all()
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("window", [None, 48])
+def test_decode_attn_sweep(quantized, window):
+    key = jax.random.PRNGKey(0)
+    b, h, kv, d, s = 2, 8, 2, 64, 200
+    q = jax.random.normal(key, (b, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, d))
+    lengths = jnp.array([150, 200], jnp.int32)
+    if quantized:
+        k, ks = quant.quantize_kv(k)
+        v, vs = quant.quantize_kv(v)
+    else:
+        ks = vs = None
+    out = da_ops.decode_attention(q, k, v, lengths, ks, vs, window=window,
+                                  backend="pallas", bs=64)
+    ref = da_ref.decode_attention_ref(q, k, v, lengths, ks, vs, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), m=st.integers(1, 9),
+       kmul=st.integers(1, 3), n=st.integers(8, 130))
+def test_property_lut_matmul(bits, m, kmul, n):
+    k = 64 * kmul
+    w = jax.random.normal(jax.random.PRNGKey(bits + m), (k, n))
+    qt = quant.quantize(w, bits, 64)
+    x = jax.random.normal(jax.random.PRNGKey(n), (m, k))
+    y = lut_ops.lut_matmul(x, qt, backend="pallas")
+    y_ref = lut_ref.lut_matmul_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)

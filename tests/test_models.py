@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests + decode/forward consistency (the
+assignment's reduced-config requirement) + SAIL quantized-serving path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import encdec, lm
+from repro.models.sail_linear import QuantPolicy, quantize_params
+
+ARCHS = C.ARCHS
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_decode(arch):
+    cfg = C.get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    if cfg.family == "encdec":
+        params = encdec.init_params(key, cfg)
+        frames = jax.random.normal(key, (2, cfg.enc_seq, cfg.d_model))
+        toks = jax.random.randint(key, (2, 9), 0, cfg.vocab)
+        loss, _ = encdec.loss_fn(params, {"frames": frames, "tokens": toks},
+                                 cfg)
+        assert np.isfinite(float(loss))
+        cache = encdec.serve_prefill(params, frames, cfg, cache_len=16)
+        logits, cache = encdec.serve_decode_step(params, toks[:, :1], cache,
+                                                 cfg)
+        assert logits.shape == (2, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        return
+    params = lm.init_params(key, cfg)
+    pre = (jax.random.normal(key, (2, cfg.vision_tokens, cfg.d_model))
+           if cfg.frontend == "vision" else None)
+    toks = jax.random.randint(key, (2, 17), 0, cfg.vocab)
+    loss, _ = lm.loss_fn(params, {"tokens": toks, "prefix_embeds": pre}, cfg)
+    assert np.isfinite(float(loss))
+    logits, cache = lm.prefill(params, toks[:, :-1], cfg, cache_len=32,
+                               prefix_embeds=pre)
+    logits, cache = lm.decode_step(params, toks[:, :1], cache, cfg)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "qwen3_0_6b", "hymba_1_5b",
+                                  "mixtral_8x7b", "xlstm_350m",
+                                  "granite_moe_1b_a400m"])
+def test_decode_matches_forward(arch):
+    """Prefill+decode must reproduce teacher-forced logits (KV-cache
+    correctness — ring buffer, RoPE offsets, SSM/xLSTM state carry)."""
+    cfg = C.get_smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    logits_full, _ = lm.forward(params, toks, cfg, moe_mode="dense")
+    logits_p, cache = lm.prefill(params, toks[:, :8], cfg, cache_len=32)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(logits_full[:, 7]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(8, 12):
+        logits_d, cache = lm.decode_step(params, toks[:, t:t + 1], cache,
+                                         cfg)
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(logits_full[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_windowed_ring_cache_matches_full():
+    """SWA arch: decoding with a window-sized ring cache must equal
+    decoding with a full-length cache (window masking correctness)."""
+    cfg = dataclasses.replace(C.get_smoke("h2o_danube_3_4b"), window=16)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 30), 0, cfg.vocab)
+    _, cache_full = lm.prefill(params, toks[:, :8], cfg, cache_len=64)
+    _, cache_ring = lm.prefill(params, toks[:, :8], cfg, cache_len=16)
+    for t in range(8, 30):
+        lf, cache_full = lm.decode_step(params, toks[:, t:t + 1],
+                                        cache_full, cfg)
+        lr, cache_ring = lm.decode_step(params, toks[:, t:t + 1],
+                                        cache_ring, cfg)
+        np.testing.assert_allclose(np.asarray(lr), np.asarray(lf),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_quant_kv_decode_close():
+    cfg = C.get_smoke("llama3_2_1b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+    lf, cf = lm.prefill(params, toks[:, :8], cfg, cache_len=32)
+    lq, cq = lm.prefill(params, toks[:, :8], cfg, cache_len=32,
+                        quant_kv=True)
+    # int8 KV: small relative error on logits
+    denom = float(jnp.abs(lf).max())
+    assert float(jnp.abs(lq - lf).max()) / denom < 0.08
+    lf2, _ = lm.decode_step(params, toks[:, 8:9], cf, cfg)
+    lq2, _ = lm.decode_step(params, toks[:, 8:9], cq, cfg, quant_kv=True)
+    assert float(jnp.abs(lq2 - lf2).max()) / denom < 0.1
+
+
+@pytest.mark.parametrize("ql", [2, 4, 8])
+def test_sail_quantized_serving(ql):
+    """Full SAIL path: quantized weights + quantized KV still decode to
+    finite, vocab-shaped logits; Q8 stays close to f32."""
+    cfg = C.get_smoke("tinymistral_248m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qp, b0, b1 = quantize_params(params, QuantPolicy(bits=ql, group_size=32,
+                                                     min_size=1024))
+    assert b1 < b0
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    lf, cf = lm.prefill(params, toks, cfg, cache_len=16)
+    lq, cq = lm.prefill(qp, toks, cfg, cache_len=16)
+    assert np.isfinite(np.asarray(lq)).all()
+    if ql == 8:
+        corr = np.corrcoef(np.asarray(lf).ravel(), np.asarray(lq).ravel())
+        assert corr[0, 1] > 0.98
+    lg, _ = lm.decode_step(qp, toks[:, :1], cq, cfg)
+    assert lg.shape == (2, cfg.vocab) and np.isfinite(np.asarray(lg)).all()
+
+
+def test_param_count_formula():
+    for arch in ["llama2_7b", "llama2_13b", "mixtral_8x7b"]:
+        cfg = C.get_config(arch)
+        target = {"llama2_7b": 6.74e9, "llama2_13b": 13.0e9,
+                  "mixtral_8x7b": 46.7e9}[arch]
+        assert abs(cfg.param_count() - target) / target < 0.08, \
+            (arch, cfg.param_count())
+    mx = C.get_config("mixtral_8x7b")
+    assert abs(mx.active_param_count() - 12.9e9) / 12.9e9 < 0.15

@@ -1,0 +1,83 @@
+"""Quantization: packing exactness, roundtrip error bounds, properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@pytest.mark.parametrize("bits", quant.SUPPORTED_BITS)
+def test_pack_unpack_exact(bits):
+    rng = np.random.default_rng(bits)
+    codes = rng.integers(0, 1 << bits, size=(96, 7)).astype(np.uint32)
+    packed = quant.pack_bits(jnp.asarray(codes), bits)
+    out = quant.unpack_bits(packed, bits, k=96)
+    assert (np.asarray(out) == codes).all()
+
+
+@pytest.mark.parametrize("bits", quant.SUPPORTED_BITS)
+@pytest.mark.parametrize("group", [32, 64])
+def test_pack_grouped_exact(bits, group):
+    rng = np.random.default_rng(bits * 100 + group)
+    k = group * 3
+    codes = rng.integers(0, 1 << bits, size=(k, 5)).astype(np.uint32)
+    packed = quant.pack_grouped(jnp.asarray(codes), bits, group)
+    out = quant.unpack_grouped(packed, bits, group, k)
+    assert (np.asarray(out) == codes).all()
+
+
+@pytest.mark.parametrize("bits", quant.SUPPORTED_BITS)
+def test_quantize_roundtrip_error(bits):
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 32))
+    qt = quant.quantize(w, bits, group_size=64)
+    wd = quant.dequantize(qt)
+    # worst-case uniform quantization error: half a step per group
+    step = 2.0 / max((1 << (bits - 1)) - 1, 1)
+    groups = np.asarray(w).reshape(4, 64, 32)
+    absmax = np.abs(groups).max(axis=1, keepdims=True)
+    bound = (step / 2) * absmax + 1e-6
+    err = np.abs(np.asarray(w) - np.asarray(wd)).reshape(4, 64, 32)
+    assert (err <= bound + 1e-5).all()
+
+
+def test_quantize_int_matches_scale():
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
+    wq, scales = quant.quantize_int(w, 4, 64)
+    wd = (np.asarray(wq).reshape(2, 64, 16) *
+          np.asarray(scales)[:, None, :]).reshape(128, 16)
+    # half-step bound: absmax/(2*qmax) with absmax ~ 3.5 for N(0,1)@128
+    assert np.abs(wd - np.asarray(w)).max() < 0.35
+
+
+def test_kv_quant_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 4, 16))
+    codes, scale = quant.quantize_kv(x)
+    xd = quant.dequantize_kv(codes, scale)
+    assert codes.dtype == jnp.int8
+    assert float(jnp.abs(xd - x).max()) < float(jnp.abs(x).max()) / 64
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from(quant.SUPPORTED_BITS),
+       k=st.integers(1, 4), n=st.integers(1, 17), seed=st.integers(0, 99))
+def test_property_grouped_pack_roundtrip(bits, k, n, seed):
+    rng = np.random.default_rng(seed)
+    kk = 32 * k
+    codes = rng.integers(0, 1 << bits, size=(kk, n)).astype(np.uint32)
+    packed = quant.pack_grouped(jnp.asarray(codes), bits, 32)
+    out = quant.unpack_grouped(packed, bits, 32, kk)
+    assert (np.asarray(out) == codes).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 99))
+def test_property_dequant_monotone_in_bits(bits, seed):
+    """More bits never increases reconstruction error materially."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 8))
+    err = {}
+    for b in (bits, 8):
+        qt = quant.quantize(w, b, group_size=32)
+        err[b] = float(jnp.abs(quant.dequantize(qt) - w).max())
+    assert err[8] <= err[bits] + 1e-6

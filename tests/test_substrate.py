@@ -1,0 +1,172 @@
+"""Optimizer, data pipeline, checkpointing, training loop, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.checkpoint import (AsyncCheckpointer, keep_last, latest_step,
+                              restore, save)
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.serving.engine import Engine, EngineConfig
+from repro.training.loop import TrainLoop, TrainLoopConfig
+
+
+# --- optimizer --------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(300):
+        g = {"w": 2 * params["w"]}
+        upd, state, _ = opt.update(g, state, params)
+        params = opt.apply(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_cosine_schedule():
+    fn = cosine_schedule(1.0, 10, 100)
+    assert float(fn(jnp.array(0))) == 0.0
+    assert float(fn(jnp.array(10))) == pytest.approx(1.0)
+    assert float(fn(jnp.array(100))) == pytest.approx(0.1, rel=0.01)
+
+
+def test_grad_clip():
+    opt = AdamW(learning_rate=1.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, gnorm = opt.update({"w": jnp.full(3, 100.0)}, state, params)
+    assert float(gnorm) == pytest.approx(np.sqrt(3) * 100, rel=1e-4)
+
+
+# --- data -------------------------------------------------------------------
+
+def test_data_determinism_and_resume():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=4)
+    d1 = SyntheticLM(cfg)
+    b1 = [d1.next_batch()["tokens"] for _ in range(3)]
+    d2 = SyntheticLM(cfg)
+    d2.load_state_dict({"step": 2})
+    assert (d2.next_batch()["tokens"] == b1[2]).all()
+
+
+def test_data_host_sharding():
+    full = SyntheticLM(DataConfig(vocab=64, seq_len=8, global_batch=8))
+    h0 = SyntheticLM(DataConfig(vocab=64, seq_len=8, global_batch=8,
+                                n_hosts=2, host_id=0))
+    h1 = SyntheticLM(DataConfig(vocab=64, seq_len=8, global_batch=8,
+                                n_hosts=2, host_id=1))
+    assert h0.next_batch()["tokens"].shape[0] == 4
+    assert not (h0._batch_rng(0).integers(0, 1 << 30) ==
+                h1._batch_rng(0).integers(0, 1 << 30))
+
+
+# --- checkpoint -------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.int32)}}
+    save(str(tmp_path), 7, tree, extras={"note": "x"})
+    out, extras = restore(str(tmp_path), tree)
+    assert extras["note"] == "x"
+    assert (np.asarray(out["a"]) == np.asarray(tree["a"])).all()
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    tree = {"a": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        save(str(tmp_path), s, tree)
+    keep_last(str(tmp_path), 2)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000003", "step_00000004"]
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    ck.save(3, {"w": jnp.ones(5)})
+    ck.wait()
+    out, _ = restore(str(tmp_path), {"w": jnp.zeros(5)})
+    assert (np.asarray(out["w"]) == 1).all()
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    save(str(tmp_path), 1, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), {"a": jnp.zeros(2), "b": jnp.zeros(1)})
+
+
+# --- training loop (fault tolerance) ---------------------------------------
+
+def _make_loop(tmp_path, steps=8):
+    cfg = C.get_smoke("llama3_2_1b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(learning_rate=1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, batch, cfg), has_aux=True)(params)
+        upd, opt_state, gnorm = opt.update(g, opt_state, params)
+        return opt.apply(params, upd), opt_state, {
+            "loss": loss, "grad_norm": gnorm, "nll": m["nll"]}
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                  global_batch=4))
+    return TrainLoop(step, params, opt_state, data,
+                     TrainLoopConfig(total_steps=steps, log_every=2,
+                                     checkpoint_every=4,
+                                     checkpoint_dir=str(tmp_path)))
+
+
+def test_train_loss_decreases(tmp_path):
+    loop = _make_loop(tmp_path, steps=30)
+    result = loop.run()
+    losses = [r["loss"] for r in result["log"]]
+    assert losses[-1] < losses[0]
+
+
+def test_train_checkpoint_resume(tmp_path):
+    loop1 = _make_loop(tmp_path, steps=4)
+    loop1.run()
+    assert latest_step(str(tmp_path)) == 4
+    loop2 = _make_loop(tmp_path, steps=8)
+    assert loop2.maybe_restore()
+    assert loop2.step == 4
+    assert loop2.data.state.step == 4
+    result = loop2.run()
+    assert result["final_step"] == 8
+
+
+# --- serving engine ---------------------------------------------------------
+
+def test_engine_serves_batch():
+    cfg = C.get_smoke("tinymistral_248m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, EngineConfig(batch_size=4, cache_len=64,
+                                           quantize=True, ql=4,
+                                           group_size=32, quant_kv=True))
+    assert eng.compression > 2.0
+    for i in range(5):
+        eng.submit([1 + i, 2, 3], max_new_tokens=4)
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(c.tokens) == 4 for c in done)
+    st = eng.stats()
+    assert st["generated_tokens"] == 20
+
+
+def test_engine_unquantized():
+    cfg = C.get_smoke("llama3_2_1b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, EngineConfig(batch_size=2, cache_len=32,
+                                           quantize=False, quant_kv=False))
+    eng.submit([1, 2], max_new_tokens=3)
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].tokens) == 3

@@ -1,0 +1,49 @@
+"""Algorithm 1: bit-exact int -> IEEE-754 f32 with logic ops only."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import typeconv
+
+
+def test_edge_cases():
+    vals = np.array([0, 1, -1, 2, -2, 3, (1 << 24) - 1, -(1 << 24) + 1,
+                     1 << 23, -(1 << 23), 12345, -98765], np.int32)
+    out = np.asarray(typeconv.int_to_f32(jnp.asarray(vals), n=25))
+    assert (out == vals.astype(np.float32)).all()
+    assert (np.signbit(out) == np.signbit(vals.astype(np.float32))).all()
+
+
+@pytest.mark.parametrize("n", [2, 5, 8, 16, 24, 25])
+def test_all_widths(n):
+    lim = 1 << (n - 1)
+    rng = np.random.default_rng(n)
+    vals = rng.integers(-lim + 1, lim, size=2000).astype(np.int32)
+    out = np.asarray(typeconv.int_to_f32(jnp.asarray(vals), n=n))
+    assert (out == vals.astype(np.float32)).all()
+
+
+def test_exhaustive_small_width():
+    n = 12
+    vals = np.arange(-(1 << 11) + 1, 1 << 11, dtype=np.int32)
+    out = np.asarray(typeconv.int_to_f32(jnp.asarray(vals), n=n))
+    assert (out == vals.astype(np.float32)).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(v=st.integers(-(1 << 24) + 1, (1 << 24) - 1))
+def test_property_bit_exact(v):
+    out = np.asarray(typeconv.int_to_f32(jnp.asarray([v], jnp.int32), n=25))
+    assert out[0] == np.float32(v)
+
+
+def test_cycle_formulas():
+    assert typeconv.logic_ops(25) == 25 * 25 / 2 + 13 * 24
+    assert typeconv.sram_cycles(25) == 1.5 * 625 + 39 * 24
+
+
+def test_f32_to_int_roundtrip():
+    x = jnp.asarray([0.4, -0.6, 100.2, -7.5, 3.5])
+    out = np.asarray(typeconv.f32_to_int(x))
+    assert (out == np.array([0, -1, 100, -8, 4])).all()  # round-half-even
