@@ -100,8 +100,13 @@ def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
 def _dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
     out_elems = _shape_elems(ins.rtype)
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs + ins.args)
-    lhs_name = ins.args.split(",")[0].strip().lstrip("%")
-    lhs_type = symtab.get(lhs_name, "")
+    # operands look like "f32[64,64]{1,0} %lhs, f32[64,64]{1,0} %rhs"
+    # (the % sigil is optional in some dump modes): shapes contain commas,
+    # so match a "type name" pair instead of splitting on ","
+    nm = re.search(r"%([\w.\-]+)", ins.args) or \
+        re.search(r"(?:pred|bf16|[sufc]\d+)\[[\d,]*\](?:\{[^}]*\})?\s+"
+                  r"([\w.\-]+)", ins.args)
+    lhs_type = symtab.get(nm.group(1), "") if nm else ""
     sm = _SHAPE.search(lhs_type)
     if not (m and sm):
         return 2.0 * out_elems  # fallback
@@ -123,6 +128,18 @@ def _trip_count(cond_name: str, comps: Dict[str, List[Instr]]) -> int:
     return best
 
 
+def _while_trip(ins: Instr, comps: Dict[str, List[Instr]]) -> int:
+    """Trip count of a while instruction: XLA's resolved
+    ``known_trip_count`` when recorded, else the condition-constant
+    heuristic."""
+    kt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                   ins.args + ins.attrs)
+    if kt:
+        return int(kt.group(1))
+    cond = re.search(r"condition=%?([\w.\-]+)", ins.args + ins.attrs)
+    return _trip_count(cond.group(1), comps) if cond else 1
+
+
 def analyze(hlo: str) -> Dict[str, float]:
     comps = parse_computations(hlo)
     cache: Dict[str, Dict[str, float]] = {}
@@ -139,9 +156,8 @@ def analyze(hlo: str) -> Dict[str, float]:
             op = ins.op
             base = re.sub(r"-(start|done)$", "", op)
             if op == "while":
-                cond = re.search(r"condition=%?([\w.\-]+)", ins.args + ins.attrs)
                 body = re.search(r"body=%?([\w.\-]+)", ins.args + ins.attrs)
-                trip = _trip_count(cond.group(1), comps) if cond else 1
+                trip = _while_trip(ins, comps)
                 if body and body.group(1) in comps:
                     sub = cost_of(body.group(1))
                     for kk, vv in sub.items():
@@ -201,12 +217,9 @@ def top_collectives(hlo: str, n: int = 15):
         mult[name] = m
         for ins in comps.get(name, []):
             if ins.op == "while":
-                cond = re.search(r"condition=%?([\w.\-]+)",
-                                 ins.args + ins.attrs)
                 body = re.search(r"body=%?([\w.\-]+)", ins.args + ins.attrs)
-                trip = _trip_count(cond.group(1), comps) if cond else 1
                 if body:
-                    walk(body.group(1), m * trip)
+                    walk(body.group(1), m * _while_trip(ins, comps))
             else:
                 for mm_ in re.finditer(
                         r"(?:calls=|to_apply=|body=|condition=)"

@@ -1,10 +1,11 @@
 """Batched serving with the SAIL quantized path (tensor-level scheduling).
 
-Quantizes a model to ql bits, serves a batch of prompts through the
-iteration-level engine (weights streamed once per iteration, reused by all
-users — the paper's Sec. III-A), and reports measured CPU throughput plus
-the calibrated SAIL machine model's projection for the same workload on
-the paper's hardware.
+Quantizes a model to ql bits, serves prompts through the
+continuous-batching engine (weights streamed once per iteration, reused
+by all active users — the paper's Sec. III-A — with finished slots
+back-filled at iteration granularity), and reports measured CPU
+throughput plus the calibrated SAIL machine model's projection for the
+same workload on the paper's hardware.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py --ql 4 --batch 8
 """
@@ -29,6 +30,8 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full", action="store_true",
                     help="use the full config instead of smoke (slow)")
+    ap.add_argument("--mode", choices=("continuous", "batch"),
+                    default="continuous")
     args = ap.parse_args()
 
     cfg = C.get_config(args.arch) if args.full else C.get_smoke(args.arch)
@@ -37,7 +40,7 @@ def main():
 
     engine = Engine(params, cfg, EngineConfig(
         batch_size=args.batch, cache_len=256, quantize=True, ql=args.ql,
-        group_size=32, quant_kv=True))
+        group_size=32, quant_kv=True, mode=args.mode))
     print(f"serving {cfg.name}: weights Q{args.ql}, "
           f"compression {engine.compression:.2f}x, int8 KV cache")
 
@@ -52,7 +55,9 @@ def main():
     st = engine.stats()
     print(f"served {st['requests']} requests / "
           f"{st['generated_tokens']} tokens in {dt:.1f}s "
-          f"({st['generated_tokens']/dt:.2f} tok/s measured on this CPU)")
+          f"({st['generated_tokens']/dt:.2f} tok/s measured on this CPU, "
+          f"{st['iterations']} model iterations, "
+          f"mean TTFT {st['mean_ttft_s']:.2f}s)")
     for c in completions[:3]:
         print(f"  req {c.uid}: {len(c.tokens)} tokens, "
               f"latency {c.latency_s:.2f}s, first tokens {c.tokens[:8]}")

@@ -14,9 +14,12 @@ module provides the hardware-agnostic planner used by both:
   * ``TensorSchedule``  — the (layer, tensor) -> phase residency plan;
   * ``PipelineModel``   — analytic ping-pong timing (bubble-free condition,
     optimal batch — the paper finds batch ~= 8 balances the pipeline);
-  * ``IterationScheduler`` — the iteration-level batcher used by
-    ``repro.serving.engine`` (one model iteration serves every active user,
-    the Orca/vLLM-style loop the paper assumes).
+  * ``IterationScheduler`` — the slot-based continuous-batching scheduler
+    driving ``repro.serving.engine``: one model iteration serves every
+    active user (the Orca/vLLM-style loop the paper assumes), requests
+    occupy fixed KV-pool slots from admission to retirement, and freed
+    slots are back-filled from the FIFO queue at iteration granularity
+    under a Sarathi-style per-iteration prefill-token budget.
 """
 from __future__ import annotations
 
@@ -128,6 +131,14 @@ class PipelineModel:
 # Iteration-level batching (serving-side scheduler)
 # ---------------------------------------------------------------------------
 
+# Request lifecycle: WAITING -> PREFILL (slot assigned, prompt being
+# processed) -> DECODE (one token per model iteration) -> DONE.
+WAITING = "waiting"
+PREFILL = "prefill"
+DECODE = "decode"
+DONE = "done"
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -136,32 +147,96 @@ class Request:
     arrived_at: float = 0.0
     generated: int = 0
     done: bool = False
+    state: str = WAITING
+    slot: int = -1                # KV-pool row while PREFILL/DECODE
 
 
 @dataclasses.dataclass
 class IterationScheduler:
-    """Iteration-based scheduler: each model iteration serves every active
-    user once (paper Sec. III-A: 'inference serving systems operate on an
-    iteration-based principle when serving multiple users').
+    """Iteration-based scheduler over a fixed pool of KV-cache slots.
 
-    Admission keeps the running batch at ``target_batch`` (the pipeline's
-    optimal), back-filling finished slots from the waiting queue — the
-    iteration-granular variant of continuous batching, which the paper
-    treats as orthogonal.
+    Each model iteration serves every active user once (paper Sec. III-A:
+    'inference serving systems operate on an iteration-based principle
+    when serving multiple users'), so each layer's weights are streamed
+    once and reused batch-wide.  ``schedule()`` implements the
+    iteration-granular (Orca-style) continuous-batching admission the
+    engine runs: arrival-order FIFO, one pool slot per admitted request,
+    and a Sarathi-style per-iteration cap on newly admitted prefill
+    tokens (``prefill_budget``) so a burst of long prompts cannot stall
+    the decode cohort.  ``release()`` returns a finished request's slot
+    to the free list at iteration granularity — a request arriving
+    mid-decode joins the very next iteration instead of waiting for the
+    cohort to drain.
+
+    ``admit()``/``step_complete()`` remain as the coarse batch-mode
+    interface (run-to-completion serving, kept for A/B comparison).
     """
     target_batch: int = 8
     max_batch: int = 32
+    prefill_budget: Optional[int] = None   # new prefill tokens / iteration
     waiting: List[Request] = dataclasses.field(default_factory=list)
     running: List[Request] = dataclasses.field(default_factory=list)
     finished: List[Request] = dataclasses.field(default_factory=list)
+    free_slots: List[int] = dataclasses.field(default_factory=list)
+    _slots_init: bool = False
 
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
 
+    # --- continuous (slot) interface ------------------------------------
+
+    def _ensure_slots(self) -> None:
+        if not self._slots_init:
+            self.free_slots = list(range(self.max_batch))
+            self._slots_init = True
+
+    def schedule(self) -> List[Request]:
+        """Admit waiting requests into free slots; return the newly
+        admitted ones (state PREFILL, ``slot`` assigned).
+
+        FIFO in arrival order; total prompt tokens admitted per call are
+        capped at ``prefill_budget`` (the first admitted request is
+        exempt so an over-budget prompt cannot starve).
+        """
+        self._ensure_slots()
+        admitted: List[Request] = []
+        used = 0
+        while self.waiting and self.free_slots:
+            nxt = self.waiting[0]
+            if (admitted and self.prefill_budget is not None
+                    and used + nxt.prompt_len > self.prefill_budget):
+                break
+            req = self.waiting.pop(0)
+            req.slot = self.free_slots.pop(0)
+            req.state = PREFILL
+            used += req.prompt_len
+            self.running.append(req)
+            admitted.append(req)
+        return admitted
+
+    def release(self, uid: int) -> Request:
+        """Retire a finished request; its slot returns to the free pool."""
+        for r in self.running:
+            if r.uid == uid:
+                self.running.remove(r)
+                r.done = True
+                r.state = DONE
+                if r.slot >= 0:
+                    self.free_slots.append(r.slot)
+                    self.free_slots.sort()
+                    r.slot = -1
+                self.finished.append(r)
+                return r
+        raise KeyError(f"uid {uid} not running")
+
+    # --- batch-mode (run-to-completion) interface ------------------------
+
     def admit(self) -> List[Request]:
         """Fill the running batch up to target from the FIFO queue."""
         while self.waiting and len(self.running) < self.target_batch:
-            self.running.append(self.waiting.pop(0))
+            req = self.waiting.pop(0)
+            req.state = DECODE
+            self.running.append(req)
         return list(self.running)
 
     def step_complete(self, finished_uids: Sequence[int]) -> None:
@@ -171,6 +246,7 @@ class IterationScheduler:
             r.generated += 1
             if r.uid in done or r.generated >= r.max_new_tokens:
                 r.done = True
+                r.state = DONE
                 self.finished.append(r)
             else:
                 still.append(r)

@@ -1,0 +1,1 @@
+"""Distribution layer: sharding plans/rules and compressed collectives."""

@@ -1,0 +1,212 @@
+"""Sharding plan + parameter placement rules for the production meshes.
+
+One logical plan covers every launcher: a data axis (optionally split
+``pod x data``) carries the batch, a model axis carries tensor-parallel
+weight shards.  Rules are name-based over the parameter tree:
+
+  * column-parallel (``wq/wk/wv/w_gate/w_up`` and other in->out
+    projections): last dim on the model axis, second-to-last FSDP-sharded
+    over the data axes when the plan enables FSDP;
+  * row-parallel (``wo``, ``w_down``): model axis on the reduction dim,
+    FSDP on the output dim;
+  * embeddings: vocab (dim 0) on the model axis;
+  * 1-D params (norm scales, biases) and quantized QTensor leaves
+    (packed codes / group scales / codebooks) replicated.
+
+``_trim_spec`` makes every rule safe: any mesh axis that is absent or
+does not divide the concrete dim is dropped, so smoke configs with odd
+head counts lower without GSPMD errors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Logical placement plan resolved against a concrete mesh."""
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: Optional[str] = "model"
+    fsdp: bool = False
+
+    @property
+    def dp(self) -> AxisName:
+        if not self.dp_axes:
+            return None
+        return self.dp_axes[0] if len(self.dp_axes) == 1 else self.dp_axes
+
+
+def make_plan(mesh: Mesh, cfg: ModelConfig,
+              fsdp: Optional[bool] = None) -> Plan:
+    names = tuple(mesh.axis_names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    dp_axes = tuple(a for a in ("pod", "data", "batch") if a in names)
+    tp = "model" if sizes.get("model", 1) > 1 else None
+    if fsdp is None:
+        fsdp = any(sizes.get(a, 1) > 1 for a in dp_axes)
+    return Plan(dp_axes=dp_axes, tp_axis=tp, fsdp=bool(fsdp))
+
+
+# ---------------------------------------------------------------------------
+# constraint helper used inside model code (no-op outside a mesh context)
+# ---------------------------------------------------------------------------
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src import mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh is not None and not env_mesh.empty:
+            return env_mesh
+    except Exception:
+        pass
+    return None
+
+
+_LOGICAL_DP = ("pod", "data")
+
+
+def maybe_constrain(x: jax.Array, *logical: AxisName) -> jax.Array:
+    """``with_sharding_constraint`` iff called under an active mesh.
+
+    Logical axis names: ``"batch"`` maps onto the mesh's data axes,
+    ``"model"`` onto the tensor-parallel axis; anything the mesh lacks
+    (or that does not divide the dim) is silently dropped, so model code
+    can annotate unconditionally.
+    """
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    spec_entries = []
+    for ax in logical:
+        if ax == "batch":
+            dp = tuple(a for a in _LOGICAL_DP if a in names)
+            spec_entries.append(dp if len(dp) > 1 else
+                                (dp[0] if dp else None))
+        else:
+            spec_entries.append(ax)
+    spec = _trim_spec(P(*spec_entries), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter placement rules
+# ---------------------------------------------------------------------------
+
+_ROW_PARALLEL = ("wo", "w_down")
+_EMBED = ("embed", "pos_embed")
+_QUANT_FIELDS = (".packed", ".scales", ".codebook")
+_NAME_RE = re.compile(r"\['([^']+)'\]")
+
+
+def param_spec(path: str, shape: Sequence[int], cfg: ModelConfig,
+               plan: Plan) -> P:
+    """PartitionSpec for one parameter, by tree path + shape.
+
+    ``path`` is ``jax.tree_util.keystr`` form, e.g.
+    ``"['blocks']['attn']['wq']"``.  Leading stacked-layer / expert dims
+    are never sharded (they ride through ``lax.scan``).
+    """
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    if any(f in path for f in _QUANT_FIELDS):
+        return P(*([None] * nd))
+    names = _NAME_RE.findall(path)
+    leaf = names[-1] if names else ""
+    if nd == 1:
+        return P(None)
+    spec: list = [None] * nd
+    if any(e in leaf for e in _EMBED) or (not names and nd == 2):
+        spec[0] = plan.tp_axis
+    elif leaf in _ROW_PARALLEL:
+        spec[-2] = plan.tp_axis
+        if plan.fsdp:
+            spec[-1] = plan.dp
+    else:
+        spec[-1] = plan.tp_axis
+        if plan.fsdp:
+            spec[-2] = plan.dp
+    return P(*spec)
+
+
+def _axis_size(mesh: Mesh, entry: AxisName) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return int(np.prod([sizes.get(a, 1) for a in entry]))
+    return sizes.get(entry, 1)
+
+
+def _trim_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Fit a spec to a concrete shape: pad/truncate the rank and drop any
+    axis that the mesh lacks or that does not divide the dim."""
+    names = set(mesh.axis_names)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    entries = entries[:len(shape)]
+    out = []
+    for dim, entry in zip(shape, entries):
+        if isinstance(entry, (tuple, list)):
+            entry = tuple(a for a in entry if a in names)
+            entry = entry if entry else None
+            if len(entry or ()) == 1:
+                entry = entry[0]
+        elif entry is not None and entry not in names:
+            entry = None
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out) if out else P()
+
+
+# ---------------------------------------------------------------------------
+# tree-level sharding builders
+# ---------------------------------------------------------------------------
+
+def _shape_of(leaf) -> Tuple[int, ...]:
+    return tuple(getattr(leaf, "shape", ()))
+
+
+def param_shardings(mesh: Mesh, tree, cfg: ModelConfig, plan: Plan):
+    """NamedSharding tree for a parameter (or optimizer-moment) pytree."""
+    def one(path, leaf):
+        shape = _shape_of(leaf)
+        spec = param_spec(jax.tree_util.keystr(path), shape, cfg, plan)
+        return NamedSharding(mesh, _trim_spec(spec, shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def data_shardings(mesh: Mesh, tree, plan: Plan):
+    """Batch-dim (dim 0) sharding over the data axes for input pytrees."""
+    def one(leaf):
+        shape = _shape_of(leaf)
+        spec = _trim_spec(P(plan.dp), shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(one, tree)
+
+
+def cache_shardings(mesh: Mesh, tree, plan: Plan):
+    """Decode-cache sharding: batch lives at dim 1 of the stacked
+    per-layer arrays ([L, B, ...]) and at dim 0 of the ``length``
+    vector; everything else replicated."""
+    def one(leaf):
+        shape = _shape_of(leaf)
+        if len(shape) == 1:
+            spec = P(plan.dp)
+        elif len(shape) >= 2:
+            spec = P(None, plan.dp)
+        else:
+            spec = P()
+        return NamedSharding(mesh, _trim_spec(spec, shape, mesh))
+    return jax.tree_util.tree_map(one, tree)

@@ -4,7 +4,10 @@
         --ql 4 --batch 8 --requests 16
 
 Quantizes weights to ``--ql`` bits (QTensor storage), int8 KV cache,
-iteration-level batching (the paper's tensor-level scheduling).
+continuous batching over a fixed pool of ``--batch`` KV-cache slots (one
+model iteration serves every active user — the paper's tensor-level
+scheduling).  ``--mode batch`` selects the old run-to-completion loop
+for A/B comparison.
 """
 from __future__ import annotations
 
@@ -25,6 +28,12 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=512)
     ap.add_argument("--no-quant-kv", action="store_true")
+    ap.add_argument("--mode", choices=("continuous", "batch"),
+                    default="continuous")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max new prefill tokens admitted per iteration")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated")
     args = ap.parse_args()
 
     import repro.configs as C
@@ -38,24 +47,34 @@ def main() -> None:
     eng = Engine(params, cfg, EngineConfig(
         batch_size=args.batch, cache_len=args.cache_len, quantize=True,
         ql=args.ql, group_size=min(128, cfg.d_model),
-        quant_kv=not args.no_quant_kv))
+        quant_kv=not args.no_quant_kv, mode=args.mode,
+        prefill_budget=args.prefill_budget))
     print(f"{cfg.name}: Q{args.ql} weights "
           f"({eng.compression:.2f}x compression), "
-          f"{'int8' if not args.no_quant_kv else 'f32'} KV")
+          f"{'int8' if not args.no_quant_kv else 'f32'} KV, "
+          f"{args.mode} scheduling")
 
+    on_token = None
+    if args.stream:
+        on_token = lambda uid, tok: print(f"  [uid {uid}] {tok}")
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         n = int(rng.integers(4, 16))
         eng.submit(rng.integers(0, cfg.vocab, size=n).tolist(),
-                   max_new_tokens=args.max_new)
+                   max_new_tokens=args.max_new, on_token=on_token)
     t0 = time.time()
     eng.run()
     dt = time.time() - t0
     st = eng.stats()
     print(f"{st['requests']} requests, {st['generated_tokens']} tokens, "
           f"{st['generated_tokens']/dt:.2f} tok/s, "
-          f"mean latency {st['mean_latency_s']:.2f}s, "
-          f"{st['iterations']} iterations")
+          f"mean latency {st['mean_latency_s']:.2f}s "
+          f"(p99 {st['p99_latency_s']:.2f}s), "
+          f"mean TTFT {st['mean_ttft_s']:.2f}s, "
+          f"{st['iterations']} model iterations "
+          f"({st['prefill_iterations']} prefill / "
+          f"{st['decode_iterations']} decode, "
+          f"{st['prefill_tokens']} prompt tokens)")
 
 
 if __name__ == "__main__":

@@ -185,7 +185,14 @@ def loss_fn(params, batch, cfg: ModelConfig, moe_mode: str = "dispatch",
 
 def init_cache(params, cfg: ModelConfig, batch: int, cache_len: int,
                quant_kv: bool = False) -> Dict[str, Any]:
-    """Allocate the stacked per-layer decode cache."""
+    """Allocate the stacked per-layer decode cache.
+
+    With ``batch = max_batch`` this is the serving engine's fixed slot
+    pool: a ``[max_batch, cache_len]`` KV arena whose rows (slots) are
+    independently written by ``prefill_into_slot`` and advanced by
+    ``decode_step(..., active_mask=...)`` — requests come and go without
+    the pool ever being reshaped or reallocated.
+    """
     from repro.models import ssm as ssm_lib
     from repro.models import xlstm as xlstm_lib
     nb = n_scan_blocks(cfg)
@@ -280,10 +287,65 @@ def prefill(params, tokens, cfg: ModelConfig, cache_len: int,
     return logits, cache
 
 
+def _scatter_slots(pool: Dict[str, Any], fresh: Dict[str, Any],
+                   slots: jax.Array) -> Dict[str, Any]:
+    """Write a freshly prefilled batch-b cache into pool rows ``slots``.
+
+    Every stacked per-layer array carries batch at axis 1 ([L, B, ...]);
+    ``length`` carries it at axis 0 — a pure scatter, so the pool is never
+    reshaped and untouched slots keep their contents bit-for-bit.
+    """
+    layers = jax.tree_util.tree_map(
+        lambda dst, src: dst.at[:, slots].set(src.astype(dst.dtype)),
+        pool["layers"], fresh["layers"])
+    length = pool["length"].at[slots].set(fresh["length"])
+    return {"length": length, "layers": layers}
+
+
+# Donating the pool lets XLA update the written rows in place; eager
+# .at[].set would copy the whole [L, max_batch, cache_len, ...] arena on
+# every admission.
+_scatter_slots_jit = jax.jit(_scatter_slots, donate_argnums=(0,))
+
+
+def prefill_into_slot(params, tokens, cache, slot, cfg: ModelConfig,
+                      quant_kv: bool = False,
+                      lengths: Optional[jax.Array] = None,
+                      prefix_embeds: Optional[jax.Array] = None,
+                      moe_mode: str = "dense"):
+    """Prefill request(s) and write their KV into slots of an existing pool.
+
+    tokens: [b, T] (right-padded prompts; typically b == 1 — one newly
+    admitted request).  cache: the engine's ``[max_batch, cache_len]``
+    pool from ``init_cache``.  slot: int or [b] int array of target rows.
+    Returns (last-token logits [b, V], updated pool).  Handles the int8
+    quant-KV path (codes + scales scattered together) and recurrent
+    families (ssm/xlstm state rows are replaced the same way).
+    """
+    slots = jnp.atleast_1d(jnp.asarray(slot, jnp.int32))
+    if cfg.family == "ssm":
+        cache_len = 0
+    else:
+        cache_len = cache["layers"]["k"].shape[2]
+    logits, fresh = prefill(params, tokens, cfg, cache_len=cache_len,
+                            quant_kv=quant_kv, lengths=lengths,
+                            prefix_embeds=prefix_embeds, moe_mode=moe_mode)
+    return logits, _scatter_slots_jit(cache, fresh, slots)
+
+
 @partial(jax.jit, static_argnames=("cfg", "quant_kv", "moe_mode"))
 def decode_step(params, tokens, cache, cfg: ModelConfig,
-                quant_kv: bool = False, moe_mode: str = "dense"):
-    """One decode step.  tokens [B, 1] -> (logits [B, V], new cache)."""
+                quant_kv: bool = False, moe_mode: str = "dense",
+                active_mask: Optional[jax.Array] = None):
+    """One decode step.  tokens [B, 1] -> (logits [B, V], new cache).
+
+    active_mask: optional [B] bool — retired slots keep their cache
+    position frozen (their ``length`` does not advance) so the batch
+    never reshapes as requests finish; their lanes still flow through
+    the matmuls (the weight stream is shared either way) but their
+    outputs are dead values the engine ignores until the slot is
+    re-prefilled.
+    """
     b = tokens.shape[0]
     position = cache["length"]                   # absolute position of token
     x = embed_tokens(params, tokens, cfg, pos_offset=0)
@@ -304,7 +366,11 @@ def decode_step(params, tokens, cache, cfg: ModelConfig,
                                            cache["layers"]))
     x = apply_norm(params["final_norm"], x, cfg)
     logits = lm_logits(params, x, cfg)[:, 0]
-    new_cache = {"length": cache["length"] + 1, "layers": new_layers}
+    if active_mask is None:
+        new_length = cache["length"] + 1
+    else:
+        new_length = cache["length"] + active_mask.astype(jnp.int32)
+    new_cache = {"length": new_length, "layers": new_layers}
     return logits, new_cache
 
 

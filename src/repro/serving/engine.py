@@ -1,29 +1,42 @@
-"""Batched serving engine — the paper's tensor-level scheduling in system
-form (Sec. III-A).
+"""Continuous-batching serving engine over a fixed pool of KV-cache slots.
 
-Iteration-based serving: each engine step runs ONE model iteration for the
-whole active batch, so every layer's weights are streamed once per
-iteration and reused across all users (weight temporal locality — on TPU
-that reuse happens in VMEM; the analytic LLC model lives in
-core/scheduler.py).  Slots freed by finished requests are back-filled from
-the waiting queue at iteration granularity.
+The paper's serving contribution (Sec. III-A) is iteration-based
+scheduling: ONE model iteration serves every active user, so each layer's
+weights are streamed once and reused batch-wide (weight temporal locality
+— in the LLC on the paper's machine, in VMEM on TPU).  This engine makes
+that iteration the scheduling quantum, Orca/vLLM-style:
+
+  * ``init_cache`` allocates a fixed ``[max_batch, cache_len]`` KV pool
+    once; requests are prefilled *into* free slots
+    (``lm.prefill_into_slot``) and retired per-slot, so the batch never
+    reshapes and the decode step compiles exactly once;
+  * every ``step()`` admits waiting requests into free slots (FIFO, with
+    a Sarathi-style cap on new prefill tokens per iteration), appends
+    each active request's pending token, retires slots on EOS/max-tokens,
+    and runs one masked decode iteration for all remaining slots;
+  * a request arriving mid-decode joins the very next iteration instead
+    of waiting for the cohort to drain — the weight-reuse window the
+    paper optimizes is never wasted on a partially idle batch.
+
+``mode="batch"`` keeps the old run-to-completion loop (admit a cohort,
+decode it to the end, admit again) for A/B comparison — see
+``benchmarks/serve_bench.py``.
 
 Runs the SAIL path: weights SAIL-quantized (QTensor), KV cache optionally
-int8.  The engine is deliberately synchronous and deterministic —
-production async wrappers (request queues, streaming) belong to the RPC
-layer, not the execution engine.
+int8.  The engine is synchronous and deterministic; streaming consumers
+hook ``submit(..., on_token=...)``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheduler import IterationScheduler, Request
+from repro.core.scheduler import DECODE, IterationScheduler, Request
 from repro.models import lm
 from repro.models.common import ModelConfig
 from repro.models.sail_linear import QuantPolicy, quantize_params
@@ -31,7 +44,7 @@ from repro.models.sail_linear import QuantPolicy, quantize_params
 
 @dataclasses.dataclass
 class EngineConfig:
-    batch_size: int = 8            # the pipeline-balancing batch (paper: 8)
+    batch_size: int = 8            # KV-pool slots (paper: 8 balances the pipe)
     cache_len: int = 4096
     quantize: bool = True
     ql: int = 4
@@ -40,6 +53,9 @@ class EngineConfig:
     min_size: int = 1024           # quantize tensors >= this many elements
     eos_token: int = -1            # -1: never stop early
     temperature: float = 0.0       # 0 = greedy
+    mode: str = "continuous"       # "continuous" | "batch" (run-to-completion)
+    prefill_budget: Optional[int] = None  # new prefill tokens per iteration
+    prompt_bucket: int = 16        # prompts padded to a multiple (compile reuse)
 
 
 @dataclasses.dataclass
@@ -47,10 +63,12 @@ class Completion:
     uid: int
     tokens: List[int]
     latency_s: float
+    ttft_s: float = 0.0            # submit -> first token available
 
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig):
+        assert ecfg.mode in ("continuous", "batch"), ecfg.mode
         self.cfg = cfg
         self.ecfg = ecfg
         if ecfg.quantize:
@@ -62,29 +80,148 @@ class Engine:
         else:
             self.params, self.compression = params, 1.0
         self.sched = IterationScheduler(target_batch=ecfg.batch_size,
-                                        max_batch=ecfg.batch_size)
+                                        max_batch=ecfg.batch_size,
+                                        prefill_budget=ecfg.prefill_budget)
         self._uid = 0
         self.completions: Dict[int, Completion] = {}
         self._gen: Dict[int, List[int]] = {}
         self._t0: Dict[int, float] = {}
-        self.iterations = 0
+        self._ttft: Dict[int, float] = {}
+        self._on_token: Dict[int, Callable[[int, int], None]] = {}
+        self.events: Dict[int, Dict[str, int]] = {}   # per-uid iteration marks
+        self.iterations = 0            # total model iterations (prefill+decode)
+        self.prefill_iterations = 0
+        self.decode_iterations = 0
+        self.prefill_tokens = 0
+        clen = ecfg.cache_len if cfg.window is None \
+            else min(ecfg.cache_len, cfg.window)
+        self._clen = clen
+        if ecfg.mode == "continuous":
+            self.cache = lm.init_cache(self.params, cfg, ecfg.batch_size,
+                                       clen, ecfg.quant_kv)
+            self._cur = np.zeros((ecfg.batch_size,), np.int32)
 
     # --- client API -------------------------------------------------------
-    def submit(self, prompt: List[int], max_new_tokens: int) -> int:
+    def submit(self, prompt: List[int], max_new_tokens: int,
+               on_token: Optional[Callable[[int, int], None]] = None) -> int:
+        """Queue a request; returns its uid.
+
+        ``on_token(uid, token)`` (optional) is invoked as each generated
+        token is committed — the streaming hook.
+        """
         self._uid += 1
         self.sched.submit(Request(uid=self._uid, prompt_len=len(prompt),
-                                  max_new_tokens=max_new_tokens))
+                                  max_new_tokens=max_new_tokens,
+                                  arrived_at=time.time()))
         self._gen[self._uid] = list(prompt)
         self._t0[self._uid] = time.time()
+        if on_token is not None:
+            self._on_token[self._uid] = on_token
         return self._uid
 
-    def run(self) -> List[Completion]:
-        """Serve until all submitted requests finish."""
-        while not self.sched.idle():
+    def step(self) -> bool:
+        """One engine iteration: admit+prefill into free slots, commit each
+        active slot's pending token (retiring on EOS/max-tokens), then run
+        one masked decode for every remaining slot.  Returns True while
+        work remains."""
+        if self.ecfg.mode != "continuous":
             self._serve_batch()
+            return not self.sched.idle()
+        admitted = self.sched.schedule()
+        if admitted:
+            # group same-padded-length admissions into ONE prefill pass:
+            # a K-request burst streams each layer's weights once, not K
+            # times (the paper's weight temporal locality, applied to
+            # prefill as well as decode)
+            groups: Dict[int, List[Request]] = {}
+            for req in admitted:
+                groups.setdefault(self._padded_len(req), []).append(req)
+            for padded, reqs in groups.items():
+                self._prefill_slots(reqs, padded)
+        # commit pending tokens, retire finished slots
+        for req in list(self.sched.running):
+            finished = req.generated >= req.max_new_tokens  # max_new == 0
+            if not finished:
+                tok = int(self._cur[req.slot])
+                self._gen[req.uid].append(tok)
+                req.generated += 1
+                cb = self._on_token.get(req.uid)
+                if cb is not None:
+                    cb(req.uid, tok)
+                finished = (tok == self.ecfg.eos_token or
+                            req.generated >= req.max_new_tokens)
+            if finished:
+                self._finish(req)
+        # one masked decode iteration serves every still-active slot
+        active = list(self.sched.running)
+        if active:
+            mask = np.zeros((self.ecfg.batch_size,), bool)
+            for req in active:
+                mask[req.slot] = True
+            logits, self.cache = lm.decode_step(
+                self.params, jnp.asarray(self._cur[:, None]), self.cache,
+                self.cfg, quant_kv=self.ecfg.quant_kv,
+                active_mask=jnp.asarray(mask))
+            self.iterations += 1
+            self.decode_iterations += 1
+            nxt = self._sample(logits)
+            for req in active:
+                self._cur[req.slot] = nxt[req.slot]
+                self.events[req.uid].setdefault("first_decode_iteration",
+                                                self.iterations)
+        return not self.sched.idle()
+
+    def run(self) -> List[Completion]:
+        """Serve until all submitted requests finish (the drain loop)."""
+        while self.step():
+            pass
         return list(self.completions.values())
 
-    # --- internals ----------------------------------------------------------
+    # --- continuous internals ---------------------------------------------
+    def _padded_len(self, req: Request) -> int:
+        # recurrent families (ssm/hybrid) fold every input token into the
+        # state, so right-padding would pollute it — prefill exact-length;
+        # attention families bucket-pad for compile-cache reuse (causal
+        # masking + the ring-cache validity window ignore the padding).
+        bucket = 1 if self.cfg.family in ("ssm", "hybrid") \
+            else max(1, self.ecfg.prompt_bucket)
+        plen = req.prompt_len
+        return max(min(-(-plen // bucket) * bucket,
+                       max(self._clen, plen)), plen)
+
+    def _prefill_slots(self, reqs: List[Request], padded: int) -> None:
+        """One prefill pass admits a same-length group into its slots."""
+        b = len(reqs)
+        toks = np.zeros((b, padded), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for i, req in enumerate(reqs):
+            toks[i, :req.prompt_len] = self._gen[req.uid][:req.prompt_len]
+            lengths[i] = req.prompt_len
+        slots = np.asarray([req.slot for req in reqs], np.int32)
+        logits, self.cache = lm.prefill_into_slot(
+            self.params, jnp.asarray(toks), self.cache, slots, self.cfg,
+            quant_kv=self.ecfg.quant_kv, lengths=jnp.asarray(lengths))
+        self.iterations += 1
+        self.prefill_iterations += 1
+        self.prefill_tokens += int(lengths.sum())
+        first = self._sample(logits)
+        now = time.time()
+        for i, req in enumerate(reqs):
+            self._cur[req.slot] = int(first[i])
+            self._ttft[req.uid] = now - self._t0[req.uid]
+            req.state = DECODE
+            self.events[req.uid] = {"admitted_iteration": self.iterations}
+
+    def _finish(self, req: Request) -> None:
+        self.sched.release(req.uid)
+        gen = self._gen[req.uid][req.prompt_len:]
+        self.completions[req.uid] = Completion(
+            uid=req.uid, tokens=gen,
+            latency_s=time.time() - self._t0[req.uid],
+            ttft_s=self._ttft.get(req.uid, 0.0))
+        self.events[req.uid]["finished_iteration"] = self.iterations
+
+    # --- batch-mode (run-to-completion) internals -------------------------
     def _serve_batch(self) -> None:
         batch = self.sched.admit()
         if not batch:
@@ -98,12 +235,16 @@ class Engine:
             p = self._gen[r.uid][:r.prompt_len]
             toks[i, :len(p)] = p
             lengths[i] = len(p)
-        clen = ecfg.cache_len if cfg.window is None \
-            else min(ecfg.cache_len, cfg.window)
         logits, cache = lm.prefill(
-            self.params, jnp.asarray(toks), cfg, cache_len=clen,
+            self.params, jnp.asarray(toks), cfg, cache_len=self._clen,
             quant_kv=ecfg.quant_kv, lengths=jnp.asarray(lengths))
+        self.iterations += 1
+        self.prefill_iterations += 1
+        self.prefill_tokens += int(lengths.sum())
         cur = self._sample(logits)
+        now = time.time()
+        for r in batch:
+            self._ttft[r.uid] = now - self._t0[r.uid]
         # iteration loop: one decode step serves the whole batch
         active = list(batch)
         steps = max(r.max_new_tokens for r in batch)
@@ -111,27 +252,36 @@ class Engine:
         for step in range(steps):
             for i, r in enumerate(active):
                 if r.uid not in done_at:
+                    if r.max_new_tokens <= 0:
+                        done_at[r.uid] = step
+                        continue
                     self._gen[r.uid].append(int(cur[i]))
+                    cb = self._on_token.get(r.uid)
+                    if cb is not None:
+                        cb(r.uid, int(cur[i]))
                     if (int(cur[i]) == ecfg.eos_token or
                             step + 1 >= r.max_new_tokens):
                         done_at[r.uid] = step
-            self.iterations += 1
             if len(done_at) == len(active) or step == steps - 1:
                 break
             logits, cache = lm.decode_step(
                 self.params, cur[:, None], cache, cfg,
                 quant_kv=ecfg.quant_kv)
+            self.iterations += 1
+            self.decode_iterations += 1
             cur = self._sample(logits)
         for r in active:
             gen = self._gen[r.uid][r.prompt_len:]
             self.completions[r.uid] = Completion(
                 uid=r.uid, tokens=gen,
-                latency_s=time.time() - self._t0[r.uid])
+                latency_s=time.time() - self._t0[r.uid],
+                ttft_s=self._ttft.get(r.uid, 0.0))
         self.sched.step_complete([r.uid for r in active])
         # mark any remaining (shouldn't happen in sync mode)
         self.sched.running = [r for r in self.sched.running
                               if r.uid not in self.completions]
 
+    # --- shared -----------------------------------------------------------
     def _sample(self, logits) -> np.ndarray:
         if self.ecfg.temperature <= 0:
             return np.asarray(jnp.argmax(logits, axis=-1))
@@ -141,9 +291,16 @@ class Engine:
 
     def stats(self) -> Dict[str, Any]:
         lats = [c.latency_s for c in self.completions.values()]
+        ttfts = [c.ttft_s for c in self.completions.values()]
         toks = sum(len(c.tokens) for c in self.completions.values())
         return {"requests": len(self.completions),
                 "generated_tokens": toks,
                 "iterations": self.iterations,
+                "prefill_iterations": self.prefill_iterations,
+                "decode_iterations": self.decode_iterations,
+                "prefill_tokens": self.prefill_tokens,
                 "weight_compression": round(self.compression, 2),
-                "mean_latency_s": float(np.mean(lats)) if lats else 0.0}
+                "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
+                "p99_latency_s": float(np.percentile(lats, 99))
+                if lats else 0.0,
+                "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0}

@@ -1,0 +1,109 @@
+"""Hypothesis shim: real ``hypothesis`` when installed, otherwise a
+minimal fixed-seed sample sweep with the same decorator surface.
+
+Usage (drop-in for the subset this suite needs)::
+
+    from _hyp import given, settings, strategies as st
+
+The fallback draws ``max_examples`` deterministic samples per test (seeded
+from the test name, so failures reproduce) and runs the test body once per
+sample.  It implements ``integers``, ``sampled_from``, ``booleans``,
+``floats``, ``just``, ``lists`` and ``tuples`` plus ``.map``/``.filter``
+— enough for property-style tests without the dependency.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+except ImportError:
+    import hashlib
+    import types
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate too restrictive")
+            return _Strategy(draw)
+
+    def _integers(min_value=None, max_value=None):
+        lo = -(1 << 16) if min_value is None else int(min_value)
+        hi = (1 << 16) if max_value is None else int(max_value)
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def _floats(min_value=-1e6, max_value=1e6, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    def _just(value):
+        return _Strategy(lambda rng: value)
+
+    def _lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, sampled_from=_sampled_from, booleans=_booleans,
+        floats=_floats, just=_just, lists=_lists, tuples=_tuples)
+
+    _DEFAULT_EXAMPLES = 10
+
+    def given(**strats):
+        def decorate(fn):
+            # No functools.wraps: pytest must see a zero-arg signature,
+            # not the strategy parameters (it would treat them as
+            # fixtures).
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+                seed = int.from_bytes(hashlib.sha256(
+                    fn.__qualname__.encode()).digest()[:4], "big")
+                for i in range(n):
+                    rng = np.random.default_rng((seed, i))
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on sweep sample "
+                            f"{i}/{n}: {drawn!r}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._hyp_given = True
+            return wrapper
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def decorate(fn):
+            if getattr(fn, "_hyp_given", False):
+                fn._hyp_max_examples = max_examples
+            return fn
+        return decorate

@@ -1,0 +1,10 @@
+"""Test-suite path setup: make ``_hyp`` (and ``repro`` when PYTHONPATH is
+unset) importable regardless of pytest's rootdir/import mode."""
+import os
+import sys
+
+_HERE = os.path.dirname(__file__)
+_SRC = os.path.join(_HERE, "..", "src")
+for p in (_HERE, os.path.abspath(_SRC)):
+    if p not in sys.path:
+        sys.path.insert(0, p)

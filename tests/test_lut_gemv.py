@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import lut_gemv
 
@@ -42,14 +42,25 @@ def test_padding_path():
 
 
 def test_quantized_end_to_end_close():
+    """The LUT pipeline must not add error beyond the irreducible weight
+    quantization noise: compare against x @ dequant(wq) (what an exact
+    integer GEMV + group dequant computes, up to 8-bit activation
+    rounding), not against the unquantized matmul, whose 4-bit noise
+    floor at K=128 is ~0.17 and not this function's responsibility."""
     x = jax.random.normal(jax.random.PRNGKey(2), (4, 128))
     w = jax.random.normal(jax.random.PRNGKey(3), (128, 32))
     from repro.core.quant import quantize_int
     wq, ws = quantize_int(w, 4, 64)
     y = lut_gemv.lut_gemv_quantized(x, wq, ws, nbw=4, group_size=64)
     ref = x @ w
-    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
-    assert rel < 0.12  # 4-bit weights + 8-bit activations, K=128
+    wd = (wq.reshape(-1, 64, 32) * ws[:, None, :]).reshape(128, 32)
+    qref = x @ wd                       # weight-quant-only oracle
+    scale = float(jnp.abs(ref).max())
+    lut_err = float(jnp.abs(y - qref).max()) / scale
+    wq_err = float(jnp.abs(qref - ref).max()) / scale
+    assert lut_err < 0.02               # 8-bit activations add <2%
+    assert wq_err < 0.3                 # 4-bit group quant sanity bound
+    assert float(jnp.abs(y - ref).max()) / scale < wq_err + 0.02
 
 
 @settings(max_examples=30, deadline=None)
