@@ -21,7 +21,7 @@ Validated against hand-counted examples in tests/test_hlo_cost.py.
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
                 "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,

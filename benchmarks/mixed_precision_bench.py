@@ -1,0 +1,209 @@
+"""Mixed-precision Pareto sweep: uniform ql vs sensitivity-allocated bits.
+
+Trains a tiny LM briefly, scores per-(matrix, layer) quantization
+sensitivity on a calibration batch (``repro.core.sensitivity``), then
+compares, at matched byte budgets, the end-to-end output error of
+
+  * uniform quantization at every supported precision (2/3/4/5/6/8), and
+  * the greedy budgeted allocation ("minimize total error s.t. bytes").
+
+For each configuration it also reports the SAIL cost model's projected
+C-SRAM decode cycles (each matrix priced at its own ``ql`` — the lutmm
+instruction takes precision per call, so mixed allocations are free at
+the ISA level).  Results print as a table and optionally land in a JSON
+artifact; ``--check`` asserts the Pareto claim the allocator exists for:
+at the uniform-4-bit byte budget, allocated mixed precision achieves
+strictly lower output error on the calibration batch.
+
+Run:  PYTHONPATH=src python benchmarks/mixed_precision_bench.py \
+          --train-steps 60 --budgets q3,q4,q5 --json mixed_precision.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core import cost_model as cm
+from repro.core import sensitivity as sens
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.models.sail_linear import QuantPolicy, quantize_params
+from repro.optim.adamw import AdamW
+
+
+def train_briefly(params, cfg, steps: int):
+    if steps <= 0:
+        return params
+    opt = AdamW(learning_rate=3e-3)
+    opt_state = opt.init(params)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, _), g = jax.value_and_grad(lambda pp: lm.loss_fn(pp, b, cfg), has_aux=True)(p)
+        upd, o, _ = opt.update(g, o, p)
+        return opt.apply(p, upd), o, loss
+
+    for _ in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, opt_state, _ = step(params, opt_state, batch)
+    return params
+
+
+def allocation_units(params, policy):
+    """(k, n, bits, copies) per quantizable unit under ``policy`` — the
+    cost model's view of a (possibly mixed) allocation."""
+    units = []
+    for pstr, w, stacked in sens.quantizable_units(params, policy):
+        k, n = int(w.shape[-2]), int(w.shape[-1])
+        spec = policy.bits_for(pstr)
+        if stacked:
+            per_slice = 1
+            for d in w.shape[1:-2]:
+                per_slice *= int(d)
+            layers = int(w.shape[0])
+            if isinstance(spec, (tuple, list)):
+                for b in spec:
+                    units.append((k, n, int(b), per_slice))
+            else:
+                units.append((k, n, int(spec), per_slice * layers))
+        else:
+            units.append((k, n, int(spec), 1))
+    return units
+
+
+def evaluate(params, policy, fwd, ref):
+    """(true output error, quantized bytes, projected cycles)."""
+    qtree, _, nbytes = quantize_params(params, policy)
+    err = float(jnp.mean((fwd(qtree) - ref) ** 2))
+    cycles = cm.mixed_decode_cycles(allocation_units(params, policy))
+    return err, int(nbytes), float(cycles)
+
+
+def budget_bytes(params, policy):
+    """Quantized-weight bytes under the allocator's own accounting (packed
+    words + scales, no per-tensor codebook) — the apples-to-apples number
+    for budget comparisons; quantize_params' total also counts codebooks
+    and every unquantized leaf."""
+    units = allocation_units(params, policy)
+    return sum(sens.unit_bytes(k, n, b, policy.group_size, c) for k, n, b, c in units)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinymistral_248m")
+    ap.add_argument("--layers", type=int, default=4, help="override n_layers")
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--group-size", type=int, default=64)
+    ap.add_argument("--calib-batch", type=int, default=4)
+    ap.add_argument("--calib-seq", type=int, default=32)
+    ap.add_argument("--budgets", default="q3,q4,q5", help="comma list of q<b>")
+    ap.add_argument("--json", default=None, help="write results to this path")
+    ap.add_argument("--check", action="store_true", help="assert Pareto win at q4")
+    args = ap.parse_args()
+
+    cfg = C.get_smoke(args.arch)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    params = train_briefly(params, cfg, args.train_steps)
+    tokens = sens.calibration_tokens(cfg.vocab, args.calib_batch, args.calib_seq)
+    fwd = jax.jit(lambda p: lm.forward(p, tokens, cfg)[0])
+    ref = fwd(params)
+    base = QuantPolicy(bits=4, group_size=args.group_size, min_size=1024)
+
+    results = {
+        "config": {
+            "arch": cfg.name,
+            "n_layers": cfg.n_layers,
+            "group_size": args.group_size,
+            "train_steps": args.train_steps,
+            "calib": [args.calib_batch, args.calib_seq],
+        },
+        "uniform": [],
+        "allocated": [],
+    }
+    hdr = f"{'config':<26} {'bytes':>9} {'output err':>11} {'proj Mcycles':>13} bit histogram"
+    print(hdr)
+    print("-" * len(hdr))
+
+    uniform_err = {}
+    uniform_bytes = {}
+    for b in sens.SUPPORTED_BITS:
+        pol = dataclasses.replace(base, bits=b)
+        err, nbytes, cycles = evaluate(params, pol, fwd, ref)
+        uniform_err[b], uniform_bytes[b] = err, nbytes
+        results["uniform"].append({"bits": b, "bytes": nbytes, "err": err, "cycles": cycles})
+        print(f"{'uniform Q' + str(b):<26} {nbytes:>9} {err:>11.6f} {cycles / 1e6:>13.3f}")
+
+    t0 = time.time()
+    scores = sens.output_sensitivity(params, cfg, tokens, base)
+    score_s = time.time() - t0
+    pareto = None
+    for part in filter(None, args.budgets.split(",")):
+        budget_bits = int(part.lstrip("q"))
+        pol, rep = sens.calibrate_policy(
+            params, cfg, base, match_uniform=budget_bits, scores=scores
+        )
+        err, nbytes, cycles = evaluate(params, pol, fwd, ref)
+        hist = dict(Counter(rep.bits_by_unit.values()))
+        results["allocated"].append(
+            {
+                "budget": part,
+                "bytes": nbytes,
+                "err": err,
+                "cycles": cycles,
+                "bits_histogram": hist,
+                "predicted_err": rep.predicted_error,
+            }
+        )
+        print(
+            f"{'allocated @' + part + ' bytes':<26} {nbytes:>9} {err:>11.6f} "
+            f"{cycles / 1e6:>13.3f} {hist}"
+        )
+        if budget_bits == 4:
+            uni4_budget = budget_bytes(params, dataclasses.replace(base, bits=4))
+            alloc_budget = budget_bytes(params, pol)
+            pareto = {
+                "uniform_err": uniform_err[4],
+                "allocated_err": err,
+                "uniform_bytes": uniform_bytes[4],
+                "allocated_bytes": nbytes,
+                "uniform_budget_bytes": uni4_budget,
+                "allocated_budget_bytes": alloc_budget,
+                "dominates": bool(err < uniform_err[4] and alloc_budget <= uni4_budget),
+            }
+    results["pareto_q4"] = pareto
+    results["score_seconds"] = score_s
+
+    if pareto is not None:
+        verdict = "DOMINATES" if pareto["dominates"] else "DOES NOT DOMINATE"
+        print(
+            f"\nallocated {verdict} uniform Q4: "
+            f"err {pareto['allocated_err']:.6f} vs {pareto['uniform_err']:.6f} "
+            f"at {pareto['allocated_bytes']} vs {pareto['uniform_bytes']} bytes "
+            f"(sensitivity scoring took {score_s:.1f}s)"
+        )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+    if args.check:
+        assert pareto is not None, "--check needs q4 in --budgets"
+        if not pareto["dominates"]:
+            raise AssertionError(
+                f"allocated mixed precision failed to Pareto-dominate uniform Q4: {pareto}"
+            )
+        print("CHECK OK: allocated mixed precision Pareto-dominates uniform Q4")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,6 @@ block and returns rows for programmatic checks.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core.typeconv import sram_cycles

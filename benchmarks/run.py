@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python -m benchmarks.run  [--skip-kernels]
 from __future__ import annotations
 
 import argparse
-import sys
 
 
 def main() -> None:

@@ -26,6 +26,8 @@ def main():
     ap.add_argument("--train-steps", type=int, default=30)
     ap.add_argument("--nf", action="store_true",
                     help="use the non-uniform (normal-float) codebook")
+    ap.add_argument("--no-alloc", action="store_true",
+                    help="skip the sensitivity-allocated mixed rows")
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch)
@@ -62,6 +64,21 @@ def main():
         proj = cm.sail_tokens_per_second(cm.LLAMA2_7B, ql, 16, 8)
         print(f"Q{ql:>2d} {qloss:10.4f} {qloss-base_loss:+8.4f} "
               f"{b0/b1:8.1f}x {proj:18.1f}")
+
+    if not args.no_alloc:
+        # sensitivity-allocated mixed precision at the uniform-4 byte
+        # budget: same weight bytes, lower degradation (SAIL's
+        # "optimal bit precision varies across layers")
+        from repro.core import sensitivity as sens
+        base = QuantPolicy(bits=4, group_size=32, min_size=1024,
+                           codebook=nf_codebook if args.nf else None)
+        pol, rep = sens.calibrate_policy(
+            params, cfg, base, match_uniform=4,
+            tokens=eval_batch["tokens"][:, :-1])
+        qp, b0, b1 = quantize_params(params, pol)
+        qloss = float(lm.loss_fn(qp, eval_batch, cfg)[0])
+        print(f"mix {qloss:10.4f} {qloss-base_loss:+8.4f} {b0/b1:8.1f}x "
+              f"{'(allocated at the Q4 byte budget)':>18s}")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--bit-policy", default=None,
+                    help="mixed-precision spec, e.g. rules:mlp=3,attn=5 "
+                         "or auto:q4 (see repro.core.sensitivity)")
     ap.add_argument("--full", action="store_true",
                     help="use the full config instead of smoke (slow)")
     ap.add_argument("--mode", choices=("continuous", "batch"),
@@ -40,8 +43,11 @@ def main():
 
     engine = Engine(params, cfg, EngineConfig(
         batch_size=args.batch, cache_len=256, quantize=True, ql=args.ql,
-        group_size=32, quant_kv=True, mode=args.mode))
-    print(f"serving {cfg.name}: weights Q{args.ql}, "
+        group_size=32, quant_kv=True, mode=args.mode,
+        bit_policy=args.bit_policy))
+    wdesc = (f"mixed ({args.bit_policy})"
+             if engine.stats()["mixed_precision"] else f"Q{args.ql}")
+    print(f"serving {cfg.name}: weights {wdesc}, "
           f"compression {engine.compression:.2f}x, int8 KV cache")
 
     rng = np.random.default_rng(0)

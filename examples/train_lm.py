@@ -54,7 +54,6 @@ def main():
     mesh = make_mesh((n_dev, 1), ("data", "model"))
     print(f"training {cfg.name} on {n_dev} device(s)")
 
-    import repro.launch.specs as sp
     sp_shapes = {"tokens": jax.ShapeDtypeStruct(
         (args.batch, args.seq + 1), jnp.int32)}
     built = build_train_step(cfg, mesh, bf16_compute=False)

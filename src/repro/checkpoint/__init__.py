@@ -1,2 +1,4 @@
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, keep_last,
-                                         latest_step, restore, save)
+                                         latest_step, quantized_template,
+                                         restore, restore_quantized, save,
+                                         save_quantized)

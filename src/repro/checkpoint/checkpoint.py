@@ -71,6 +71,17 @@ def _update_latest(directory: str, step: int) -> None:
                os.path.join(directory, "LATEST"))
 
 
+def _load_manifest(directory: str, step: Optional[int] = None) -> Dict:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    return meta
+
+
 def latest_step(directory: str) -> Optional[int]:
     p = os.path.join(directory, "LATEST")
     if not os.path.exists(p):
@@ -108,9 +119,14 @@ def restore(directory: str, template, step: Optional[int] = None,
     leaves = []
     for (path, tleaf), rec, shd in zip(flat_t, meta["leaves"], shard_flat):
         arr = np.load(os.path.join(d, rec["id"] + ".npy"))
-        if list(arr.shape) != list(np.shape(tleaf)):
+        # templates may be abstract (jax.eval_shape output) — a
+        # ShapeDtypeStruct carries .shape/.dtype but np.shape chokes on it
+        tshape = getattr(tleaf, "shape", None)
+        if tshape is None:
+            tshape = np.shape(tleaf)
+        if list(arr.shape) != list(tshape):
             raise ValueError(f"shape mismatch at {rec['path']}: "
-                             f"{arr.shape} vs {np.shape(tleaf)}")
+                             f"{arr.shape} vs {tuple(tshape)}")
         if shd is not None:
             leaves.append(jax.device_put(arr, shd))
         else:
@@ -118,6 +134,52 @@ def restore(directory: str, template, step: Optional[int] = None,
                                       if hasattr(tleaf, "dtype") else None))
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     return tree, meta.get("extras", {})
+
+
+def save_quantized(directory: str, step: int, qtree, policy,
+                   extras: Optional[Dict] = None) -> str:
+    """Save a SAIL-quantized (possibly mixed-precision) parameter tree.
+
+    The ``QuantPolicy`` spec — including a sensitivity-calibrated
+    per-path/per-layer bit allocation — rides along in the manifest
+    extras, so ``restore_quantized`` can rebuild the exact mixed tree
+    structure (QTensor statics, blocks segmentation) from nothing but the
+    raw model's parameter template."""
+    extras = dict(extras or {})
+    extras["quant_policy"] = policy.to_spec()
+    return save(directory, step, qtree, extras)
+
+
+def quantized_template(raw_template, policy):
+    """Abstract (ShapeDtypeStruct) quantized tree for ``restore``: the
+    structure ``quantize_params`` would emit, without doing the math."""
+    from repro.models.sail_linear import quantize_params
+    return jax.eval_shape(lambda p: quantize_params(p, policy)[0],
+                          raw_template)
+
+
+def restore_quantized(directory: str, raw_template,
+                      step: Optional[int] = None):
+    """Restore a quantized checkpoint given only the *unquantized* model
+    params (or their shapes).  The bit policy stored by ``save_quantized``
+    reconstructs the mixed tree template — heterogeneous per-leaf bits and
+    scan-segmentation included.  Returns (tree, extras)."""
+    from repro.models.sail_linear import QuantPolicy
+    if step is None:
+        # pin the step once: a background save landing mid-restore must
+        # not split the manifest (template) and the weight arrays across
+        # two different checkpoints
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    meta = _load_manifest(directory, step)
+    spec = meta.get("extras", {}).get("quant_policy")
+    if spec is None:
+        raise ValueError(f"checkpoint under {directory} was not written "
+                         "by save_quantized (no quant_policy in manifest)")
+    policy = QuantPolicy.from_spec(spec)
+    template = quantized_template(raw_template, policy)
+    return restore(directory, template, step)
 
 
 def keep_last(directory: str, n: int = 3) -> None:

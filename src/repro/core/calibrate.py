@@ -20,7 +20,6 @@ and the per-anchor residuals recorded in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
-import dataclasses
 import itertools
 import math
 

@@ -185,6 +185,38 @@ def model_weight_bytes(model: ModelSpec, ql: int) -> float:
     return model.params * BPW[ql] / 8.0
 
 
+def qtensor_bytes(k: int, n: int, bits: int, group_size: int = 128,
+                  copies: int = 1) -> int:
+    """Exact bytes of one SAIL-quantized [K, N] weight in the repo's
+    QTensor storage: group-aligned packed uint32 words + f32 group scales
+    (``copies`` folds stacked layers / MoE experts).  This is the byte
+    accounting the mixed-precision allocator budgets against."""
+    vpw = 32 // bits
+    wpg = -(-group_size // vpw)                  # ceil: words per group
+    groups = k // group_size
+    return copies * (groups * wpg * n * 4 + groups * n * 4)
+
+
+def mixed_decode_cycles(units, machine: SailMachine = SailMachine(),
+                        batch: int = 8, nbw: int = 4, abits: int = 8,
+                        threads: int = 16, prt: bool = True) -> float:
+    """Projected C-SRAM cycles of one decode iteration under a mixed
+    per-matrix bit allocation: each matrix runs LUT-GEMV at its own ``ql``
+    (the lutmm instruction's per-call precision field — uniformity is a
+    policy choice, never a hardware requirement).
+
+    ``units``: iterable of (k, n, bits) or (k, n, bits, copies).
+    """
+    disc = (1.0 - PAPER_CYCLE_REDUCTION) if prt else 1.0
+    total = 0.0
+    for u in units:
+        k, n, bits = u[0], u[1], u[2]
+        copies = u[3] if len(u) > 3 else 1
+        total += copies * lut_gemv_cycles(machine, batch, k, n, nbw, bits,
+                                          abits, threads, disc)
+    return total
+
+
 def sail_tokens_per_second(model: ModelSpec, ql: int, threads: int = 16,
                            batch: int = 1, nbw: Optional[int] = None,
                            abits: int = 8, machine: SailMachine = SailMachine(),

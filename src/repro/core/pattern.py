@@ -22,8 +22,6 @@ be served from the PRT.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
-
 import numpy as np
 
 from repro.core.lut_gemv import activation_patterns

@@ -178,7 +178,6 @@ def nf_codebook(bits: int) -> jnp.ndarray:
     p = (np.arange(levels) + 0.5) / levels
     # inverse normal CDF via numpy (Acklam approximation not needed: use
     # scipy-free erfinv through np)
-    from math import sqrt
     q = np.sqrt(2.0) * _erfinv(2 * p - 1)
     q = q / np.abs(q).max()
     return jnp.asarray(q, dtype=jnp.float32)

@@ -24,7 +24,7 @@ module provides the hardware-agnostic planner used by both:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,510 @@
+"""Sensitivity-calibrated mixed-precision bit allocation.
+
+SAIL's first stated challenge is that "optimal bit precision varies across
+models and layers" (Sec. I); its LUT-GEMV supports arbitrary ``ql`` per
+matmul at minimal overhead.  This module turns that capability into a
+serving feature:
+
+  * ``output_sensitivity`` — from a small calibration batch, score each
+    weight matrix (per layer, per matrix: attn qkv/o vs mlp up/down vs
+    lm_head) by the quantization-induced end-to-end output error: quantize
+    ONE matrix (or one layer slice of a scan stack) at each candidate
+    precision, run the model, and measure the mean squared logit deviation
+    against the f32 reference.
+  * ``weight_sensitivity`` — the calibration-free proxy (squared weight
+    reconstruction error), for when no forward passes are affordable.
+  * ``allocate_bits`` — greedy solver for "minimize total predicted error
+    subject to a byte budget" over ``SUPPORTED_BITS``, using the exact
+    QTensor byte accounting (packed words + group scales + codebook).
+  * ``calibrate_policy`` — end-to-end: score, solve, and return a
+    ``QuantPolicy`` whose ``allocation`` carries per-path (and per-layer)
+    bits; ``quantize_params`` then emits a mixed tree.
+  * ``parse_bit_policy`` / ``resolve_bit_policy`` — the serving-facing
+    spec surface (``EngineConfig.bit_policy``, ``--bit-policy``):
+    ``"uniform:<b>"``, ``"rules:<regex>=<b>,..."``, ``"auto:q<b>"``
+    (byte budget matched to uniform b-bit), ``"auto:<f>bpw"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import SUPPORTED_BITS
+
+# A unit key: (keystr path, layer index or None for non-stacked leaves).
+UnitKey = Tuple[str, Optional[int]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """One independently allocatable weight: a 2-D leaf or one layer slice
+    of a scan-stacked leaf.  ``copies`` folds extra leading dims (MoE
+    experts) into the byte accounting."""
+    path: str
+    layer: Optional[int]
+    k: int
+    n: int
+    copies: int
+    errors: Mapping[int, float]    # bits -> predicted output error
+
+    @property
+    def key(self) -> UnitKey:
+        return (self.path, self.layer)
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationReport:
+    """Solver diagnostics (the bench's Pareto bookkeeping)."""
+    bits_by_unit: Dict[UnitKey, int]
+    bytes_total: int
+    budget_bytes: int
+    predicted_error: float
+    feasible: bool                 # min-bits config fit inside the budget
+
+
+def unit_bytes(k: int, n: int, bits: int, group_size: int,
+               copies: int = 1) -> int:
+    """QTensor storage bytes for one [K, N] weight (x ``copies``): packed
+    words + group scales.  The 2^bits-entry codebook is shared per tensor
+    (and tiny), so it is excluded — allocator accounting must price a
+    per-layer unit and a whole-leaf unit consistently."""
+    from repro.core.cost_model import qtensor_bytes
+    return qtensor_bytes(k, n, bits, group_size, copies)
+
+
+def fake_quant(w: jax.Array, bits: int, group_size: int,
+               codebook: Optional[jax.Array] = None) -> jax.Array:
+    """Quantize->dequantize roundtrip of ``w[..., K, N]`` (vmapped over
+    leading dims) — the error a SAIL-served matmul would see."""
+    if w.ndim == 2:
+        return quant.dequantize(quant.quantize(w, bits, group_size,
+                                               codebook))
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+    out = jax.vmap(lambda a: quant.dequantize(
+        quant.quantize(a, bits, group_size, codebook)))(flat)
+    return out.reshape(lead + out.shape[-2:])
+
+
+def calibration_tokens(vocab: int, batch: int = 4, seq: int = 32,
+                       seed: int = 0) -> jax.Array:
+    """Deterministic synthetic calibration batch (matches the synthetic
+    data pipeline used everywhere else in this repro)."""
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, seq), 0,
+                              vocab)
+
+
+def quantizable_units(params, policy) -> List[Tuple[str, Any, bool]]:
+    """(path, leaf, stacked?) for every leaf ``policy`` would quantize."""
+    from repro.models.sail_linear import (_should_quantize,
+                                          _should_quantize_stacked)
+    out = []
+    for path, w in jax.tree_util.tree_flatten_with_path(params)[0]:
+        pstr = jax.tree_util.keystr(path)
+        if _should_quantize(pstr, w, policy):
+            out.append((pstr, w, False))
+        elif _should_quantize_stacked(pstr, w, policy):
+            out.append((pstr, w, True))
+    return out
+
+
+def uniform_bytes(params, policy, bits: int) -> int:
+    """Total QTensor bytes of quantizing every eligible leaf at ``bits``
+    (the byte budget 'uniform b-bit' occupies)."""
+    total = 0
+    for _, w, stacked in quantizable_units(params, policy):
+        k, n = w.shape[-2:]
+        copies = 1
+        for d in w.shape[:-2]:
+            copies *= d
+        total += unit_bytes(k, n, bits, policy.group_size, copies)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# sensitivity scoring
+# ---------------------------------------------------------------------------
+
+def weight_sensitivity(params, policy,
+                       bits_candidates: Sequence[int] = SUPPORTED_BITS,
+                       per_layer: bool = True) -> Dict[UnitKey, Dict[int, float]]:
+    """Calibration-free proxy: sum of squared weight reconstruction error
+    per unit and candidate precision."""
+    scores: Dict[UnitKey, Dict[int, float]] = {}
+    for pstr, w, stacked in quantizable_units(params, policy):
+        if stacked and per_layer:
+            slices = [(layer, w[layer]) for layer in range(w.shape[0])]
+        else:
+            slices = [(None if not stacked else -1, w)]
+        for layer, ws in slices:
+            key = (pstr, None) if layer in (None, -1) else (pstr, layer)
+            errs = {}
+            for b in bits_candidates:
+                dq = fake_quant(ws, b, policy.group_size,
+                                policy.codebook_for(b))
+                errs[b] = float(jnp.sum((dq - ws) ** 2))
+            scores[key] = errs
+    return scores
+
+
+def output_sensitivity(params, cfg, tokens, policy,
+                       bits_candidates: Sequence[int] = SUPPORTED_BITS,
+                       per_layer: bool = True) -> Dict[UnitKey, Dict[int, float]]:
+    """Calibrated scores, centered at the uniform-``policy.bits`` model.
+
+    Independent per-matrix probes against the f32 model mispredict the
+    fully quantized operating point (quantization errors interact), so
+    each score is instead the TRUE end-to-end logit MSE (vs the f32
+    reference) of the model with every eligible weight at the uniform
+    baseline precision and ONLY the probed unit moved to the candidate
+    precision.  An allocation differing from uniform in few units is then
+    predicted to second order in the number of moved units.
+
+    The forward is jitted once (probe trees share the structure), so the
+    cost is |units| x (|bits_candidates| - 1) reruns of one compiled step.
+    """
+    from repro.models import lm
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    fwd = jax.jit(lambda p: lm.forward(p, tokens, cfg)[0])
+    ref = fwd(params)
+
+    eligible = {pstr: stacked
+                for pstr, _, stacked in quantizable_units(params, policy)}
+    base_bits = policy.bits
+    base_cb = policy.codebook_for(base_bits)
+    base_leaves = []
+    for path, w in flat:
+        pstr = jax.tree_util.keystr(path)
+        base_leaves.append(fake_quant(w, base_bits, policy.group_size,
+                                      base_cb)
+                           if pstr in eligible else w)
+
+    def probe(idx: int, new_leaf) -> float:
+        swapped = list(base_leaves)
+        swapped[idx] = new_leaf
+        logits = fwd(jax.tree_util.tree_unflatten(treedef, swapped))
+        return float(jnp.mean((logits - ref) ** 2))
+
+    err_base = float(jnp.mean(
+        (fwd(jax.tree_util.tree_unflatten(treedef, base_leaves)) - ref)
+        ** 2))
+
+    scores: Dict[UnitKey, Dict[int, float]] = {}
+    for idx, (path, w) in enumerate(flat):
+        pstr = jax.tree_util.keystr(path)
+        if pstr not in eligible:
+            continue
+        stacked = eligible[pstr]
+        if stacked and per_layer:
+            for layer in range(w.shape[0]):
+                errs = {}
+                for b in bits_candidates:
+                    if b == base_bits:
+                        errs[b] = err_base
+                        continue
+                    dq = fake_quant(w[layer], b, policy.group_size,
+                                    policy.codebook_for(b))
+                    errs[b] = probe(idx, base_leaves[idx].at[layer].set(dq))
+                scores[(pstr, layer)] = errs
+        else:
+            errs = {}
+            for b in bits_candidates:
+                if b == base_bits:
+                    errs[b] = err_base
+                    continue
+                dq = fake_quant(w, b, policy.group_size,
+                                policy.codebook_for(b))
+                errs[b] = probe(idx, dq)
+            scores[(pstr, None)] = errs
+    return scores
+
+
+# ---------------------------------------------------------------------------
+# greedy budgeted allocation
+# ---------------------------------------------------------------------------
+
+def allocate_bits(units: Sequence[Unit], budget_bytes: int,
+                  group_size: int,
+                  bits_candidates: Sequence[int] = SUPPORTED_BITS,
+                  pinned: Optional[Mapping[UnitKey, int]] = None
+                  ) -> AllocationReport:
+    """Greedy knapsack: start every free unit at the narrowest candidate,
+    then repeatedly apply the upgrade with the best error-reduction per
+    extra byte that still fits the budget.  Upgrades may jump several
+    precisions at once, so locally non-monotone error ladders (a 3-bit
+    grid occasionally reconstructs worse than 2-bit) cannot wedge the
+    solver."""
+    cand = sorted(set(int(b) for b in bits_candidates))
+    pinned = dict(pinned or {})
+    free = [u for u in units if u.key not in pinned]
+
+    def bytes_at(u: Unit, b: int) -> int:
+        return unit_bytes(u.k, u.n, b, group_size, u.copies)
+
+    def climb(start_bits: int):
+        """Greedy upgrades from every free unit at ``start_bits``.
+        Returns (bits_by_unit, total_bytes, predicted_error) or None if
+        the start itself exceeds the budget."""
+        current: Dict[UnitKey, int] = {}
+        total = 0
+        for u in units:
+            b = pinned.get(u.key, start_bits)
+            current[u.key] = b
+            total += bytes_at(u, b)
+        if total > budget_bytes:
+            return None
+        while True:
+            best = None  # (ratio, delta_err, key_tiebreak, new_bits)
+            for u in free:
+                cur = current[u.key]
+                err_cur = u.errors[cur]
+                for b in cand:
+                    if b <= cur:
+                        continue
+                    db = bytes_at(u, b) - bytes_at(u, cur)
+                    if db <= 0 or total + db > budget_bytes:
+                        continue
+                    de = err_cur - u.errors[b]
+                    if de <= 0:
+                        continue
+                    pick = (de / db, de, u.key, b)
+                    if best is None or pick > best:
+                        best = pick
+            if best is None:
+                break
+            _, _, key, b = best
+            u = next(x for x in free if x.key == key)
+            total += bytes_at(u, b) - bytes_at(u, current[key])
+            current[key] = b
+        total = swap_refine(current, total)
+        predicted = sum(u.errors[current[u.key]] for u in units)
+        return current, total, predicted
+
+    def swap_refine(current: Dict[UnitKey, int], total: int) -> int:
+        """Pairwise trades: downgrade one unit to fund upgrading another.
+        A monotone climb cannot cross a tight budget (e.g. start =
+        uniform-4 at the uniform-4 budget leaves zero headroom); profitable
+        down+up swaps are how mixed precision beats uniform there."""
+        while True:
+            best = None  # (net_err_delta, key_down, bits_down, key_up, bits_up)
+            for ud in free:
+                cur_d = current[ud.key]
+                for bd in cand:
+                    if bd >= cur_d:
+                        continue
+                    saved = bytes_at(ud, cur_d) - bytes_at(ud, bd)
+                    loss = ud.errors[bd] - ud.errors[cur_d]
+                    for uu in free:
+                        if uu.key == ud.key:
+                            continue
+                        cur_u = current[uu.key]
+                        for bu in cand:
+                            if bu <= cur_u:
+                                continue
+                            cost = bytes_at(uu, bu) - bytes_at(uu, cur_u)
+                            if total - saved + cost > budget_bytes:
+                                continue
+                            net = loss + uu.errors[bu] - uu.errors[cur_u]
+                            pick = (net, ud.key, bd, uu.key, bu)
+                            if net < 0 and (best is None or pick < best):
+                                best = pick
+            if best is None:
+                return total
+            _, kd, bd, ku, bu = best
+            ud = next(x for x in free if x.key == kd)
+            uu = next(x for x in free if x.key == ku)
+            total += (bytes_at(ud, bd) - bytes_at(ud, current[kd])
+                      + bytes_at(uu, bu) - bytes_at(uu, current[ku]))
+            current[kd] = bd
+            current[ku] = bu
+
+    # Multi-start: all-narrowest plus every feasible uniform level — the
+    # result is never predicted-worse than the best uniform config the
+    # budget admits (greedy alone can wedge when a cheap early upgrade
+    # starves a crucial later one).
+    solutions = [s for s in (climb(b) for b in cand) if s is not None]
+    if not solutions:
+        # infeasible even at min bits: report the min-bits config
+        current = {u.key: pinned.get(u.key, cand[0]) for u in units}
+        total = sum(bytes_at(u, current[u.key]) for u in units)
+        predicted = sum(u.errors[current[u.key]] for u in units)
+        return AllocationReport(bits_by_unit=current, bytes_total=total,
+                                budget_bytes=int(budget_bytes),
+                                predicted_error=predicted, feasible=False)
+    current, total, predicted = min(solutions, key=lambda s: (s[2], s[1]))
+    return AllocationReport(bits_by_unit=current, bytes_total=total,
+                            budget_bytes=int(budget_bytes),
+                            predicted_error=predicted, feasible=True)
+
+
+def _allocation_from_units(bits_by_unit: Mapping[UnitKey, int]):
+    """{(path, layer): bits} -> BitAllocation (tuples for stacked paths)."""
+    from repro.models.sail_linear import BitAllocation
+    per_path: Dict[str, Any] = {}
+    layered: Dict[str, Dict[int, int]] = {}
+    for (path, layer), b in bits_by_unit.items():
+        if layer is None:
+            per_path[path] = int(b)
+        else:
+            layered.setdefault(path, {})[layer] = int(b)
+    for path, by_layer in layered.items():
+        n_layers = max(by_layer) + 1
+        if set(by_layer) != set(range(n_layers)):
+            raise ValueError(f"allocation for {path} misses layers: "
+                             f"{sorted(by_layer)}")
+        per_path[path] = tuple(by_layer[i] for i in range(n_layers))
+    return BitAllocation(per_path=per_path)
+
+
+def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
+                     match_uniform: Optional[int] = None,
+                     budget_bpw: Optional[float] = None,
+                     tokens=None, mode: str = "output",
+                     bits_candidates: Sequence[int] = SUPPORTED_BITS,
+                     per_layer: bool = True, calib_batch: int = 4,
+                     calib_seq: int = 32, scores=None):
+    """Score sensitivities and solve the budgeted allocation.
+
+    Budget, one of: ``budget_bytes`` (absolute), ``match_uniform=b``
+    (bytes of uniform b-bit), ``budget_bpw`` (bits per quantizable
+    weight).  Paths matched by ``policy.rules`` are pinned to their rule
+    bits and charged against the budget.  Returns ``(policy_with_
+    allocation, AllocationReport)``.
+    ``scores`` (an ``output_sensitivity``/``weight_sensitivity`` result)
+    short-circuits the probing — budget sweeps score once, solve many.
+    """
+    from repro.models.sail_linear import QuantPolicy
+    policy = policy or QuantPolicy()
+    if scores is not None:
+        pass
+    elif mode == "output":
+        if tokens is None:
+            tokens = calibration_tokens(cfg.vocab, calib_batch, calib_seq)
+        scores = output_sensitivity(params, cfg, tokens, policy,
+                                    bits_candidates, per_layer)
+    elif mode == "weight":
+        scores = weight_sensitivity(params, policy, bits_candidates,
+                                    per_layer)
+    else:
+        raise ValueError(f"mode must be 'output' or 'weight', got {mode}")
+
+    units: List[Unit] = []
+    pinned: Dict[UnitKey, int] = {}
+    total_weights = 0
+    for pstr, w, stacked in quantizable_units(params, policy):
+        k, n = w.shape[-2:]
+        per_slice_copies = 1
+        for d in w.shape[1:-2]:
+            per_slice_copies *= d
+        total_weights += w.size
+        keys = ([(pstr, layer) for layer in range(w.shape[0])]
+                if stacked and per_layer else [(pstr, None)])
+        copies = (per_slice_copies if stacked and per_layer
+                  else per_slice_copies * (w.shape[0] if stacked else 1))
+        rule_bits = None
+        for pat, b in policy.rules:
+            if re.search(pat, pstr):
+                rule_bits = int(b)
+                if rule_bits not in bits_candidates:
+                    raise ValueError(
+                        f"rule ({pat!r}, {b}) pins {pstr} outside the "
+                        f"scored candidates {tuple(bits_candidates)}")
+                break
+        for key in keys:
+            units.append(Unit(path=pstr, layer=key[1], k=k, n=n,
+                              copies=copies, errors=scores[key]))
+            if rule_bits is not None:
+                pinned[key] = rule_bits
+
+    if budget_bytes is None:
+        if match_uniform is not None:
+            budget_bytes = uniform_bytes(params, policy, match_uniform)
+        elif budget_bpw is not None:
+            budget_bytes = int(budget_bpw * total_weights / 8)
+        else:
+            budget_bytes = uniform_bytes(params, policy, policy.bits)
+    report = allocate_bits(units, budget_bytes, policy.group_size,
+                           bits_candidates, pinned)
+    allocation = _allocation_from_units(report.bits_by_unit)
+    return dataclasses.replace(policy, allocation=allocation), report
+
+
+# ---------------------------------------------------------------------------
+# serving-facing spec surface
+# ---------------------------------------------------------------------------
+
+def parse_bit_policy(spec: str) -> Dict[str, Any]:
+    """``--bit-policy`` / ``EngineConfig.bit_policy`` string grammar.
+
+      uniform:<b>                         one precision everywhere
+      rules:<regex>=<b>[,<regex>=<b>...]  explicit per-path overrides
+      auto:q<b>                           allocate within uniform-b bytes
+      auto:<f>bpw                         allocate within f bits/weight
+    """
+    kind, _, rest = spec.partition(":")
+    if kind == "uniform":
+        return {"mode": "uniform", "bits": int(rest)}
+    if kind == "rules":
+        rules = []
+        default = None
+        for part in filter(None, rest.split(",")):
+            pat, _, b = part.rpartition("=")
+            if not pat:
+                raise ValueError(f"bad rule {part!r} in {spec!r}")
+            if pat in ("default", "*"):
+                default = int(b)
+            else:
+                rules.append((pat, int(b)))
+        out: Dict[str, Any] = {"mode": "rules", "rules": rules}
+        if default is not None:
+            out["bits"] = default
+        return out
+    if kind == "auto":
+        rest = rest.strip()
+        if rest.startswith("q"):
+            return {"mode": "auto", "match_uniform": int(rest[1:])}
+        if rest.endswith("bpw"):
+            return {"mode": "auto", "budget_bpw": float(rest[:-3])}
+        raise ValueError(f"auto budget must be q<b> or <f>bpw, got {rest!r}")
+    raise ValueError(f"unknown bit policy {spec!r} "
+                     "(expected uniform:/rules:/auto:)")
+
+
+def resolve_bit_policy(bit_policy, params, cfg, base):
+    """EngineConfig.bit_policy (None | str | dict | QuantPolicy) -> the
+    QuantPolicy to quantize with.  ``base`` carries the engine's
+    group_size/min_size/default bits; auto mode runs the calibration."""
+    from repro.models.sail_linear import QuantPolicy
+    if bit_policy is None:
+        return base
+    if isinstance(bit_policy, QuantPolicy):
+        return bit_policy
+    if isinstance(bit_policy, str):
+        bit_policy = parse_bit_policy(bit_policy)
+    if not isinstance(bit_policy, Mapping):
+        raise TypeError(f"bit_policy must be None/str/dict/QuantPolicy, "
+                        f"got {type(bit_policy)!r}")
+    spec = dict(bit_policy)
+    mode = spec.pop("mode", "spec")
+    if mode == "uniform":
+        return dataclasses.replace(base, bits=int(spec["bits"]))
+    if mode == "rules":
+        return dataclasses.replace(
+            base, bits=int(spec.get("bits", base.bits)),
+            rules=tuple((p, int(b)) for p, b in spec.get("rules", ())))
+    if mode == "auto":
+        policy, _ = calibrate_policy(params, cfg, base, **spec)
+        return policy
+    if mode == "spec":
+        merged = QuantPolicy.from_spec({
+            "bits": base.bits, "group_size": base.group_size,
+            "min_size": base.min_size, "skip_embed": base.skip_embed,
+            **spec})
+        return merged
+    raise ValueError(f"unknown bit_policy mode {mode!r}")

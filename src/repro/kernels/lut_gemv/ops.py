@@ -7,8 +7,6 @@ against ``ref.lut_matmul_ref`` in interpret mode).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

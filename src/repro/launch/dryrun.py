@@ -25,7 +25,7 @@ import time
 import traceback
 from typing import Any, Dict, Optional
 
-import jax
+import jax  # noqa: F401  (must initialize after the XLA_FLAGS above)
 import numpy as np
 
 

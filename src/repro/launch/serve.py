@@ -28,6 +28,10 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=512)
     ap.add_argument("--no-quant-kv", action="store_true")
+    ap.add_argument("--bit-policy", default=None,
+                    help="mixed-precision spec: uniform:<b> | "
+                         "rules:<regex>=<b>,... | auto:q<b> | auto:<f>bpw "
+                         "(sensitivity-calibrated per-layer allocation)")
     ap.add_argument("--mode", choices=("continuous", "batch"),
                     default="continuous")
     ap.add_argument("--prefill-budget", type=int, default=None,
@@ -48,8 +52,11 @@ def main() -> None:
         batch_size=args.batch, cache_len=args.cache_len, quantize=True,
         ql=args.ql, group_size=min(128, cfg.d_model),
         quant_kv=not args.no_quant_kv, mode=args.mode,
+        bit_policy=args.bit_policy,
         prefill_budget=args.prefill_budget))
-    print(f"{cfg.name}: Q{args.ql} weights "
+    quant_desc = (f"mixed-precision ({args.bit_policy})"
+                  if eng.stats()["mixed_precision"] else f"Q{args.ql}")
+    print(f"{cfg.name}: {quant_desc} weights "
           f"({eng.compression:.2f}x compression), "
           f"{'int8' if not args.no_quant_kv else 'f32'} KV, "
           f"{args.mode} scheduling")

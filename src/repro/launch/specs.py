@@ -12,8 +12,7 @@ phi-3-vision gets 576 patch embeddings prepended to the text tokens.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ for the §Perf before/after comparison.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax

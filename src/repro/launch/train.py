@@ -12,10 +12,8 @@ current mesh.
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
-import numpy as np
 
 
 def main() -> None:
@@ -39,12 +37,9 @@ def main() -> None:
 
     import repro.configs as C
     from repro.data.pipeline import DataConfig, SyntheticLM
-    from repro.dist import sharding as sh
     from repro.launch.mesh import make_mesh, describe
     from repro.launch.steps import build_train_step
-    from repro.models import encdec, lm
     from repro.training.loop import TrainLoop, TrainLoopConfig
-    import jax.numpy as jnp
 
     cfg = C.get_smoke(args.arch) if args.smoke else C.get_config(args.arch)
     n_dev = len(jax.devices())

@@ -9,7 +9,7 @@ published dimensions plus a ``smoke()`` reduction for CPU tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

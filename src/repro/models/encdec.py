@@ -10,7 +10,7 @@ MLP.  Whisper uses LayerNorm and attention biases.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ from repro.models.blocks import _ring_write, _decode_attend
 from repro.models.common import ModelConfig
 from repro.models.layers import (apply_attention, apply_mlp, apply_norm,
                                  attention_init, dense_init, mlp_init,
-                                 norm_init, sinusoidal_positions, _qk_norm)
+                                 norm_init, sinusoidal_positions)
 from repro.models.sail_linear import mm
 
 

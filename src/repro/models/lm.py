@@ -10,9 +10,8 @@ CLIP patch embeddings) are concatenated ahead of the token embeddings.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,7 @@ from repro.models import blocks as blk
 from repro.models.common import ModelConfig
 from repro.models.layers import dense_init, norm_init, apply_norm, \
     sinusoidal_positions
-from repro.models.sail_linear import mm, QTensor, StackedQTensor
+from repro.models.sail_linear import mm
 
 
 # ---------------------------------------------------------------------------
@@ -55,6 +54,49 @@ def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
 def _layer_slice(stacked, i):
     """Slice layer i out of scan-stacked params (handles QTensor leaves)."""
     return jax.tree_util.tree_map(lambda a: a[i], stacked)
+
+
+# ---------------------------------------------------------------------------
+# segmented layer stacks (mixed-precision serving)
+# ---------------------------------------------------------------------------
+#
+# ``quantize_params`` with a per-layer bit allocation emits
+# ``params["blocks"]`` as a LIST of scan-stacked trees (consecutive layers
+# sharing one static bit width each), because a single ``lax.scan`` can
+# only carry one static ``bits`` per stacked leaf.  All model entry points
+# below scan the segments back-to-back; a plain (non-list) blocks tree is
+# the 1-segment case and lowers exactly as before.
+
+def block_segments(params) -> list:
+    """params["blocks"] as a list of stacked segment trees."""
+    blocks = params["blocks"]
+    if isinstance(blocks, (list, tuple)):
+        return list(blocks)
+    return [blocks]
+
+
+def _segment_len(segment) -> int:
+    """Number of layers in one stacked segment tree."""
+    return jax.tree_util.tree_leaves(segment)[0].shape[0]
+
+
+def _scan_segments(body_fn, x, segments):
+    """Run ``lax.scan(body_fn, x, seg)`` over each segment in order.
+
+    Returns (x, [per-segment stacked ys])."""
+    ys = []
+    for seg in segments:
+        x, y = jax.lax.scan(body_fn, x, seg)
+        ys.append(y)
+    return x, ys
+
+
+def _concat_segments(parts):
+    """Concatenate per-segment stacked pytrees back to [L, ...] arrays."""
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *parts)
 
 
 # ---------------------------------------------------------------------------
@@ -101,9 +143,10 @@ def forward(params, tokens, cfg: ModelConfig,
         return y, aux
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
-    x, auxs = jax.lax.scan(body_fn, x, params["blocks"])
+    x, auxs = _scan_segments(body_fn, x, block_segments(params))
     x = apply_norm(params["final_norm"], x, cfg)
-    return lm_logits(params, x, cfg), jnp.sum(auxs)
+    aux = sum(jnp.sum(a) for a in auxs)
+    return lm_logits(params, x, cfg), aux
 
 
 def chunked_nll(x, head, targets, mask, chunk: int = 1024,
@@ -164,7 +207,7 @@ def loss_fn(params, batch, cfg: ModelConfig, moe_mode: str = "dispatch",
         return y, aux
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
-    x, auxs = jax.lax.scan(body_fn, x, params["blocks"])
+    x, auxs = _scan_segments(body_fn, x, block_segments(params))
     x = apply_norm(params["final_norm"], x, cfg)
     npfx = x.shape[1] - targets.shape[1]
     if npfx:
@@ -175,7 +218,7 @@ def loss_fn(params, batch, cfg: ModelConfig, moe_mode: str = "dispatch",
                           transpose_head=True)
     else:
         nll = chunked_nll(x, params["lm_head"], targets, mask)
-    aux = jnp.sum(auxs)
+    aux = sum(jnp.sum(a) for a in auxs)
     return nll + aux_weight * aux, {"nll": nll, "aux": aux}
 
 
@@ -251,7 +294,8 @@ def prefill(params, tokens, cfg: ModelConfig, cache_len: int,
         return y, cache
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
-    x, caches = jax.lax.scan(body_fn, x, params["blocks"])
+    x, cache_parts = _scan_segments(body_fn, x, block_segments(params))
+    caches = _concat_segments(cache_parts)
     x = apply_norm(params["final_norm"], x, cfg)
     last = jnp.take_along_axis(
         x, (lengths - 1 + (tt - t))[:, None, None], axis=1)
@@ -362,8 +406,17 @@ def decode_step(params, tokens, cache, cfg: ModelConfig,
             moe_mode=moe_mode, quant_kv=quant_kv)
         return y, new_cache_l
 
-    x, new_layers = jax.lax.scan(body, x, (params["blocks"],
-                                           cache["layers"]))
+    segments = block_segments(params)
+    new_parts = []
+    offset = 0
+    for seg in segments:
+        n_seg = _segment_len(seg)
+        cache_seg = jax.tree_util.tree_map(
+            lambda a: a[offset:offset + n_seg], cache["layers"])
+        x, new_seg = jax.lax.scan(body, x, (seg, cache_seg))
+        new_parts.append(new_seg)
+        offset += n_seg
+    new_layers = _concat_segments(new_parts)
     x = apply_norm(params["final_norm"], x, cfg)
     logits = lm_logits(params, x, cfg)[:, 0]
     if active_mask is None:

@@ -11,16 +11,40 @@ Every weight matmul in the model goes through ``mm(x, w)``:
 format (the offline step the ``ql`` instruction field selects at runtime);
 embedding tables and 1-D params (norms, biases) stay in f32, mirroring the
 paper's mixed-precision outlier handling.
+
+Mixed precision: the paper's whole point is supporting *arbitrary* ql with
+minimal overhead ("optimal bit precision varies across models and layers",
+Sec. I).  ``QuantPolicy`` therefore resolves bits per parameter path:
+
+  * ``rules``       — explicit (regex, bits) overrides, first match wins;
+  * ``allocation``  — a :class:`BitAllocation` (typically produced by the
+    sensitivity-driven allocator in ``repro.core.sensitivity``) mapping a
+    path to a scalar or to a per-layer tuple of bits;
+  * ``bits``        — the uniform fallback.
+
+Scan-stacked layers can only carry one static ``bits`` per stack, so a
+per-layer tuple on a ``blocks`` leaf splits the stack into maximal
+uniform-bits *segments*: ``params["blocks"]`` becomes a list of stacked
+trees the model applies back-to-back (``repro.models.lm`` scans each
+segment; single-segment trees keep today's exact semantics).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import re
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QTensor, quantize, _uniform_codebook
+from repro.core.quant import (SUPPORTED_BITS, QTensor, _uniform_codebook,
+                              nf_codebook, quantize)
+
+__all__ = [
+    "BitAllocation", "QuantPolicy", "QTensor", "StackedQTensor",
+    "dequantize_any", "einsum_q", "mm", "nf_codebook", "quantize_params",
+    "set_backend",
+]
 
 # Module-level backend switch: "jnp" (XLA path — used under pjit / dry-run)
 # or "pallas" (kernel path, interpret=True on CPU).
@@ -50,13 +74,118 @@ def mm(x: jax.Array, w: Any) -> jax.Array:
     return x @ w
 
 
+# Bits for one path: a scalar, or one entry per scan-stacked layer.
+BitsSpec = Union[int, Tuple[int, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class BitAllocation:
+    """Per-path bit-width assignment (the allocator's output).
+
+    ``per_path`` maps ``jax.tree_util.keystr`` paths to a scalar bits or,
+    for scan-stacked ``blocks`` leaves, a per-layer tuple.  JSON-safe via
+    ``to_spec``/``from_spec`` so checkpoints can embed the allocation.
+    """
+    per_path: Mapping[str, BitsSpec]
+
+    def lookup(self, path: str) -> Optional[BitsSpec]:
+        return self.per_path.get(path)
+
+    def to_spec(self) -> Dict[str, Any]:
+        return {p: (list(map(int, b)) if isinstance(b, (tuple, list))
+                    else int(b))
+                for p, b in self.per_path.items()}
+
+    @staticmethod
+    def from_spec(spec: Mapping[str, Any]) -> "BitAllocation":
+        return BitAllocation(per_path={
+            p: (tuple(int(x) for x in b) if isinstance(b, (list, tuple))
+                else int(b))
+            for p, b in spec.items()})
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
-    bits: int = 4
+    bits: int = 4                  # uniform fallback precision
     group_size: int = 128
     min_size: int = 65536          # don't quantize small tensors
     skip_embed: bool = True        # gathers can't stream through LUT-GEMV
-    codebook: Optional[jax.Array] = None
+    # None | array (single-precision policies only) | callable bits->array
+    # (e.g. ``nf_codebook`` — mixed policies need a per-bits codebook)
+    codebook: Optional[Any] = None
+    rules: Tuple[Tuple[str, int], ...] = ()     # (regex, bits), first match
+    allocation: Optional[BitAllocation] = None  # sensitivity allocator output
+
+    def bits_for(self, path: str) -> BitsSpec:
+        """Resolve the bit width for one parameter path.
+
+        Explicit rules override the automatic allocation, which overrides
+        the uniform fallback."""
+        for pat, b in self.rules:
+            if re.search(pat, path):
+                return _check_bits(int(b))
+        if self.allocation is not None:
+            got = self.allocation.lookup(path)
+            if got is not None:
+                return got
+        return self.bits
+
+    def codebook_for(self, bits: int) -> Optional[jax.Array]:
+        if self.codebook is None:
+            return None
+        if callable(self.codebook):
+            return self.codebook(bits)
+        if self.codebook.shape[-1] != (1 << bits):
+            raise ValueError(
+                f"explicit codebook has {self.codebook.shape[-1]} entries "
+                f"but a leaf resolved to {bits} bits (2**{bits} needed) — "
+                "mixed policies need a callable codebook factory")
+        return self.codebook
+
+    def is_mixed(self) -> bool:
+        return bool(self.rules) or self.allocation is not None
+
+    def to_spec(self) -> Dict[str, Any]:
+        """JSON-safe description (stored in checkpoint manifests)."""
+        cb = self.codebook
+        if cb is not None:
+            if not callable(cb):
+                raise ValueError(
+                    "explicit codebook arrays are not spec-serializable; "
+                    "use a named factory (nf_codebook) or None")
+            if getattr(cb, "__name__", "") != "nf_codebook":
+                raise ValueError(f"unknown codebook factory {cb!r}")
+            cb = "nf"
+        return {"bits": int(self.bits), "group_size": int(self.group_size),
+                "min_size": int(self.min_size),
+                "skip_embed": bool(self.skip_embed), "codebook": cb,
+                "rules": [[p, int(b)] for p, b in self.rules],
+                "allocation": (self.allocation.to_spec()
+                               if self.allocation is not None else None)}
+
+    @staticmethod
+    def from_spec(spec: Mapping[str, Any]) -> "QuantPolicy":
+        cb = spec.get("codebook")
+        if cb == "nf":
+            cb = nf_codebook
+        elif cb is not None:
+            raise ValueError(f"unknown codebook spec {cb!r}")
+        alloc = spec.get("allocation")
+        return QuantPolicy(
+            bits=int(spec.get("bits", 4)),
+            group_size=int(spec.get("group_size", 128)),
+            min_size=int(spec.get("min_size", 65536)),
+            skip_embed=bool(spec.get("skip_embed", True)),
+            codebook=cb,
+            rules=tuple((p, int(b)) for p, b in spec.get("rules", ())),
+            allocation=(BitAllocation.from_spec(alloc)
+                        if alloc else None))
+
+
+def _check_bits(b: int) -> int:
+    if b not in SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {b}")
+    return b
 
 
 def _should_quantize(path: str, w, policy: QuantPolicy) -> bool:
@@ -71,64 +200,156 @@ def _should_quantize(path: str, w, policy: QuantPolicy) -> bool:
     return True
 
 
-def quantize_params(params, policy: QuantPolicy = QuantPolicy()):
-    """Convert a parameter tree to the SAIL serving format.
+def _should_quantize_stacked(path: str, w, policy: QuantPolicy) -> bool:
+    """Scan-stacked [L, K, N] / MoE [L, E, K, N] weights."""
+    return (hasattr(w, "ndim") and w.ndim >= 3
+            and "embed" not in path
+            and w.shape[-2] % policy.group_size == 0
+            and w.shape[-2] * w.shape[-1] >= policy.min_size)
 
-    Stacked weights — scan-stacked layers [L, K, N] and MoE experts
-    [L, E, K, N] — are quantized per slice (vmap over leading dims).
+
+def _scalar_bits(spec: BitsSpec, path: str, offset: int,
+                 seg_len: Optional[int]) -> int:
+    """Resolve a BitsSpec to the single static bits of one leaf/segment."""
+    if isinstance(spec, (tuple, list)):
+        if seg_len is None:
+            raise ValueError(
+                f"per-layer bits on non-stacked leaf {path}: {spec}")
+        window = set(spec[offset:offset + seg_len])
+        if len(window) != 1:
+            raise ValueError(
+                f"heterogeneous bits {spec} for {path} require a top-level "
+                "'blocks' stack (segmentation); got an unsplittable tree")
+        return _check_bits(int(spec[offset]))
+    return _check_bits(int(spec))
+
+
+def _quantize_stacked(w, bits: int, policy: QuantPolicy) -> "StackedQTensor":
+    """Quantize a stacked weight per slice (vmap over leading dims).
+
     The codebook is tiled along the first leading dim so the whole
-    StackedQTensor can ride through ``lax.scan`` as an xs pytree.
-    Returns (quantized tree, bytes_before, bytes_after).
-    """
+    StackedQTensor can ride through ``lax.scan`` as an xs pytree."""
     from repro.core.quant import pack_grouped
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    treedef = jax.tree_util.tree_structure(params)
-    before = after = 0
-    out = []
+    lead = w.shape[:-2]
+    k, n = w.shape[-2:]
+    g = policy.group_size
+    cb = policy.codebook_for(bits)
+    codebook = (_uniform_codebook(bits) if cb is None else cb).astype(
+        jnp.float32)
 
-    def quantize_arrays(w2d, codebook):
-        k, n = w2d.shape
-        g = policy.group_size
+    def one(w2d):
         wg = w2d.astype(jnp.float32).reshape(k // g, g, n)
         scale = jnp.max(jnp.abs(wg), axis=1)
         scale = jnp.where(scale == 0, 1.0, scale)
         codes = jnp.argmin(
             jnp.abs((wg / scale[:, None, :])[..., None] - codebook),
             axis=-1).astype(jnp.uint32).reshape(k, n)
-        return pack_grouped(codes, policy.bits, g), scale
+        return pack_grouped(codes, bits, g), scale
 
+    packed, scales = jax.vmap(one)(w.reshape((-1, k, n)))
+    packed = packed.reshape(lead + packed.shape[1:])
+    scales = scales.reshape(lead + scales.shape[1:])
+    return StackedQTensor(
+        packed=packed, scales=scales,
+        codebook=jnp.tile(codebook[None], (lead[0], 1)),
+        bits=bits, group_size=g, k=k)
+
+
+def _quantize_tree(params, policy: QuantPolicy, offset: int = 0):
+    """Quantize one tree whose resolved bits are uniform per leaf.
+
+    ``offset`` is the absolute layer index of stacked leaves' first slice
+    (nonzero when quantizing a blocks segment)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    before = after = 0
+    out = []
     for path, w in flat:
         pstr = jax.tree_util.keystr(path)
         before += w.size * w.dtype.itemsize
         if _should_quantize(pstr, w, policy):
-            qt = quantize(w, policy.bits, policy.group_size,
-                          codebook=policy.codebook)
+            b = _scalar_bits(policy.bits_for(pstr), pstr, 0, None)
+            qt = quantize(w, b, policy.group_size,
+                          codebook=policy.codebook_for(b))
             after += qt.nbytes()
             out.append(qt)
-        elif (hasattr(w, "ndim") and w.ndim >= 3
-              and "embed" not in pstr
-              and w.shape[-2] % policy.group_size == 0
-              and w.shape[-2] * w.shape[-1] >= policy.min_size):
-            lead = w.shape[:-2]
-            k, n = w.shape[-2:]
-            codebook = (policy.codebook if policy.codebook is not None
-                        else _uniform_codebook(policy.bits)).astype(
-                jnp.float32)
-            flat_w = w.reshape((-1, k, n))
-            qfn = jax.vmap(lambda a: quantize_arrays(a, codebook))
-            packed, scales = qfn(flat_w)
-            packed = packed.reshape(lead + packed.shape[1:])
-            scales = scales.reshape(lead + scales.shape[1:])
-            stacked = StackedQTensor(
-                packed=packed, scales=scales,
-                codebook=jnp.tile(codebook[None], (lead[0], 1)),
-                bits=policy.bits, group_size=policy.group_size, k=k)
-            after += packed.size * 4 + scales.size * 4
+        elif _should_quantize_stacked(pstr, w, policy):
+            b = _scalar_bits(policy.bits_for(pstr), pstr, offset,
+                             w.shape[0])
+            stacked = _quantize_stacked(w, b, policy)
+            after += stacked.packed.size * 4 + stacked.scales.size * 4
             out.append(stacked)
         else:
             after += w.size * w.dtype.itemsize
             out.append(w)
     return jax.tree_util.tree_unflatten(treedef, out), before, after
+
+
+def _segment_bounds(params, policy: QuantPolicy) -> Optional[List[int]]:
+    """Layer cut points implied by per-layer bit specs on blocks leaves.
+
+    Returns None when no segmentation is needed (no per-layer spec, or all
+    per-layer specs constant)."""
+    if not (isinstance(params, dict) and "blocks" in params
+            and not isinstance(params["blocks"], (list, tuple))):
+        return None
+    flat = jax.tree_util.tree_flatten_with_path(
+        {"blocks": params["blocks"]})[0]
+    n_layers = None
+    per_layer: List[Tuple[int, ...]] = []
+    for path, w in flat:
+        pstr = jax.tree_util.keystr(path)
+        if not (_should_quantize(pstr, w, policy)
+                or _should_quantize_stacked(pstr, w, policy)):
+            continue
+        spec = policy.bits_for(pstr)
+        if not isinstance(spec, (tuple, list)):
+            continue
+        if w.ndim < 3:
+            raise ValueError(f"per-layer bits on non-stacked leaf {pstr}")
+        if len(spec) != w.shape[0]:
+            raise ValueError(
+                f"allocation for {pstr} has {len(spec)} entries, stack "
+                f"has {w.shape[0]} layers")
+        if n_layers is None:
+            n_layers = w.shape[0]
+        per_layer.append(tuple(spec))
+    if not per_layer:
+        return None
+    cuts = [0]
+    for layer in range(1, n_layers):
+        if any(s[layer] != s[layer - 1] for s in per_layer):
+            cuts.append(layer)
+    cuts.append(n_layers)
+    return cuts if len(cuts) > 2 else None
+
+
+def quantize_params(params, policy: QuantPolicy = QuantPolicy()):
+    """Convert a parameter tree to the SAIL serving format.
+
+    Stacked weights — scan-stacked layers [L, K, N] and MoE experts
+    [L, E, K, N] — are quantized per slice (vmap over leading dims).
+    Bits are resolved per path (``policy.bits_for``); a per-layer tuple on
+    a ``blocks`` leaf splits the stack into uniform-bits segments and the
+    returned tree carries ``params["blocks"]`` as a list of stacked trees
+    (see module docstring).  Returns (quantized tree, bytes_before,
+    bytes_after).
+    """
+    bounds = _segment_bounds(params, policy)
+    if bounds is None:
+        return _quantize_tree(params, policy)
+    rest = {k: v for k, v in params.items() if k != "blocks"}
+    out, before, after = _quantize_tree(rest, policy)
+    segments = []
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        sub = jax.tree_util.tree_map(lambda x: x[a:b], params["blocks"])
+        qseg, sb, sa = _quantize_tree({"blocks": sub}, policy, offset=a)
+        segments.append(qseg["blocks"])
+        before += sb
+        after += sa
+    out = dict(out)
+    out["blocks"] = segments
+    return out, before, after
 
 
 @jax.tree_util.register_dataclass

@@ -10,7 +10,6 @@ giving the state tree its own out_shardings in the train step.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -51,6 +51,11 @@ class EngineConfig:
     group_size: int = 128
     quant_kv: bool = True
     min_size: int = 1024           # quantize tensors >= this many elements
+    # Mixed-precision spec: None (uniform ``ql``), a QuantPolicy, a policy
+    # spec dict, or a string — "uniform:<b>", "rules:<regex>=<b>,...",
+    # "auto:q<b>" / "auto:<f>bpw" (sensitivity-calibrated allocation on a
+    # synthetic calibration batch).  See repro.core.sensitivity.
+    bit_policy: Any = None
     eos_token: int = -1            # -1: never stop early
     temperature: float = 0.0       # 0 = greedy
     mode: str = "continuous"       # "continuous" | "batch" (run-to-completion)
@@ -71,11 +76,18 @@ class Engine:
         assert ecfg.mode in ("continuous", "batch"), ecfg.mode
         self.cfg = cfg
         self.ecfg = ecfg
+        self.quant_policy: Optional[QuantPolicy] = None
+        if ecfg.bit_policy is not None and not ecfg.quantize:
+            raise ValueError("bit_policy requires quantize=True")
         if ecfg.quantize:
-            self.params, b0, b1 = quantize_params(
-                params, QuantPolicy(bits=ecfg.ql,
-                                    group_size=ecfg.group_size,
-                                    min_size=ecfg.min_size))
+            policy = QuantPolicy(bits=ecfg.ql, group_size=ecfg.group_size,
+                                 min_size=ecfg.min_size)
+            if ecfg.bit_policy is not None:
+                from repro.core.sensitivity import resolve_bit_policy
+                policy = resolve_bit_policy(ecfg.bit_policy, params, cfg,
+                                            policy)
+            self.quant_policy = policy
+            self.params, b0, b1 = quantize_params(params, policy)
             self.compression = b0 / max(b1, 1)
         else:
             self.params, self.compression = params, 1.0
@@ -300,6 +312,8 @@ class Engine:
                 "decode_iterations": self.decode_iterations,
                 "prefill_tokens": self.prefill_tokens,
                 "weight_compression": round(self.compression, 2),
+                "mixed_precision": bool(self.quant_policy is not None
+                                        and self.quant_policy.is_mixed()),
                 "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
                 "p99_latency_s": float(np.percentile(lats, 99))
                 if lats else 0.0,

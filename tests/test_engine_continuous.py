@@ -2,7 +2,6 @@
 iteration-granular backfill on staggered arrivals, slot reuse, streaming,
 and the decode-phase stats the benchmarks report."""
 import jax
-import numpy as np
 import pytest
 
 import repro.configs as C

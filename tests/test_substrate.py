@@ -11,7 +11,7 @@ from repro.checkpoint import (AsyncCheckpointer, keep_last, latest_step,
                               restore, save)
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import lm
-from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.optim.adamw import AdamW, cosine_schedule
 from repro.serving.engine import Engine, EngineConfig
 from repro.training.loop import TrainLoop, TrainLoopConfig
 
