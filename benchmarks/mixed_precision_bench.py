@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 import repro.configs as C
 from repro.core import cost_model as cm
+from repro.core import pattern
 from repro.core import sensitivity as sens
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import lm
@@ -58,25 +59,41 @@ def train_briefly(params, cfg, steps: int):
     return params
 
 
-def allocation_units(params, policy):
-    """(k, n, bits, copies) per quantizable unit under ``policy`` — the
-    cost model's view of a (possibly mixed) allocation."""
+def allocation_units(params, policy, with_abits=False):
+    """Cost-model units per quantizable leaf under ``policy``:
+    (k, n, bits, copies), or (k, n, bits, abits, copies) when
+    ``with_abits`` (the joint allocation's view — a None abits is priced
+    at the 8-bit default by ``mixed_decode_cycles``)."""
+
+    def emit(k, n, wb, ab, copies):
+        if with_abits:
+            units.append((k, n, int(wb), None if ab is None else int(ab), copies))
+        else:
+            units.append((k, n, int(wb), copies))
+
+    def at(spec, i):
+        if spec is None or not isinstance(spec, (tuple, list)):
+            return spec
+        return spec[i]
+
     units = []
     for pstr, w, stacked in sens.quantizable_units(params, policy):
         k, n = int(w.shape[-2]), int(w.shape[-1])
         spec = policy.bits_for(pstr)
+        aspec = policy.abits_for(pstr)
         if stacked:
             per_slice = 1
             for d in w.shape[1:-2]:
                 per_slice *= int(d)
             layers = int(w.shape[0])
-            if isinstance(spec, (tuple, list)):
-                for b in spec:
-                    units.append((k, n, int(b), per_slice))
+            layered = isinstance(spec, (tuple, list)) or isinstance(aspec, (tuple, list))
+            if layered:
+                for i in range(layers):
+                    emit(k, n, at(spec, i), at(aspec, i), per_slice)
             else:
-                units.append((k, n, int(spec), per_slice * layers))
+                emit(k, n, spec, aspec, per_slice * layers)
         else:
-            units.append((k, n, int(spec), 1))
+            emit(k, n, spec, aspec, 1)
     return units
 
 
@@ -97,6 +114,108 @@ def budget_bytes(params, policy):
     return sum(sens.unit_bytes(k, n, b, policy.group_size, c) for k, n, b, c in units)
 
 
+def run_activations(args, cfg, params, tokens, fwd, ref, base):
+    """Joint (wbits, abits) vs weight-only allocation at EQUAL projected
+    decode cycles.
+
+    The weight-only reference allocates wbits within the uniform-4 byte
+    budget and serves 8-bit activations everywhere (the pre-joint
+    status quo).  The joint allocator gets that configuration's projected
+    ``mixed_decode_cycles`` as its cycle budget — it can only win by
+    re-spending cycles, e.g. dropping insensitive layers to 6-bit
+    activations to afford wider weights where the probes say it matters.
+    With ``--prt measured`` both sides are priced with the simulated
+    per-precision PRT hit rates instead of the paper's flat 13.8%.
+    """
+    print(f"\n=== joint (wbits, abits) allocation vs weight-only (prt={args.prt}) ===")
+    scores = sens.output_sensitivity(params, cfg, tokens, base)
+    act_scores = sens.activation_sensitivity(
+        params, cfg, tokens, base, abits_candidates=sens.SUPPORTED_ABITS
+    )
+
+    wpol, wrep = sens.calibrate_policy(params, cfg, base, match_uniform=4, scores=scores)
+    wpol = dataclasses.replace(wpol, act_bits=8)
+    w_units = allocation_units(params, wpol, with_abits=True)
+    w_cycles = cm.mixed_decode_cycles(w_units, nbw="auto", prt=args.prt)
+
+    jpol, jrep = sens.calibrate_policy(
+        params,
+        cfg,
+        base,
+        scores=scores,
+        act_scores=act_scores,
+        abits_candidates=sens.SUPPORTED_ABITS,
+        cycle_budget=w_cycles,
+        prt=args.prt,
+    )
+    j_units = allocation_units(params, jpol, with_abits=True)
+    j_cycles = cm.mixed_decode_cycles(j_units, nbw="auto", prt=args.prt)
+
+    def true_err(policy):
+        qtree, _, nbytes = quantize_params(params, policy)
+        return float(jnp.mean((fwd(qtree) - ref) ** 2)), int(nbytes)
+
+    w_err, w_bytes = true_err(wpol)
+    j_err, j_bytes = true_err(jpol)
+    whist = dict(Counter(wrep.bits_by_unit.values()))
+    jhist = dict(Counter(jrep.bits_by_unit.values()))
+    print(f"{'config':<22} {'bytes':>9} {'output err':>11} {'proj Mcycles':>13}")
+    print(f"{'weight-only @q4 a8':<22} {w_bytes:>9} {w_err:>11.6f} {w_cycles / 1e6:>13.4f}")
+    print(f"{'joint @equal cycles':<22} {j_bytes:>9} {j_err:>11.6f} {j_cycles / 1e6:>13.4f}")
+    print(f"weight-only bits: {whist}")
+    print(f"joint (wbits, abits): {jhist}")
+
+    flat = 1.0 - pattern.PAPER_CYCLE_REDUCTION
+    discounts = sorted(
+        {
+            round(cm.resolve_prt_discount(args.prt, nbw, wb, ab), 6)
+            for (wb, ab) in jrep.bits_by_unit.values()
+            for nbw in (1, 2, 3, 4)
+        }
+    )
+    print(f"lookup discounts in use: {discounts} (flat paper constant: {flat:.4f})")
+
+    result = {
+        "prt": args.prt,
+        "weight_only": {
+            "err": w_err,
+            "bytes": w_bytes,
+            "cycles": w_cycles,
+            "bits_histogram": {str(k): v for k, v in whist.items()},
+        },
+        "joint": {
+            "err": j_err,
+            "bytes": j_bytes,
+            "cycles": j_cycles,
+            "bits_histogram": {str(k): v for k, v in jhist.items()},
+            "predicted_err": jrep.predicted_error,
+            "cycle_budget": jrep.cycle_budget,
+        },
+        "discounts": discounts,
+        "dominates": bool(j_err < w_err and j_cycles <= w_cycles * (1 + 1e-9)),
+    }
+    if args.check:
+        assert j_cycles <= w_cycles * (1 + 1e-9), (
+            f"joint allocation exceeds the weight-only cycle budget: "
+            f"{j_cycles} > {w_cycles}"
+        )
+        assert j_err < w_err, (
+            f"joint (wbits, abits) allocation failed to beat weight-only "
+            f"at equal projected cycles: {j_err} vs {w_err}"
+        )
+        if args.prt == "measured":
+            assert any(abs(d - flat) > 1e-4 for d in discounts), (
+                f"measured PRT discounts {discounts} degenerate to the "
+                f"flat paper constant {flat}"
+            )
+        print(
+            "CHECK OK: joint allocation Pareto-dominates weight-only at "
+            f"equal projected cycles ({j_err:.6f} < {w_err:.6f} err, "
+            f"{j_cycles / 1e6:.4f} <= {w_cycles / 1e6:.4f} Mcycles)"
+        )
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinymistral_248m")
@@ -108,6 +227,18 @@ def main():
     ap.add_argument("--budgets", default="q3,q4,q5", help="comma list of q<b>")
     ap.add_argument("--json", default=None, help="write results to this path")
     ap.add_argument("--check", action="store_true", help="assert Pareto win at q4")
+    ap.add_argument(
+        "--activations",
+        action="store_true",
+        help="joint (wbits, abits) allocation vs weight-only at equal "
+        "projected cycles (with --check: assert the joint Pareto win)",
+    )
+    ap.add_argument(
+        "--prt",
+        choices=("paper", "measured"),
+        default="measured",
+        help="pattern-discount model for projected cycles in --activations mode",
+    )
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch)
@@ -119,6 +250,14 @@ def main():
     fwd = jax.jit(lambda p: lm.forward(p, tokens, cfg)[0])
     ref = fwd(params)
     base = QuantPolicy(bits=4, group_size=args.group_size, min_size=1024)
+
+    if args.activations:
+        result = run_activations(args, cfg, params, tokens, fwd, ref, base)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(result, f, indent=2)
+            print(f"wrote {args.json}")
+        return
 
     results = {
         "config": {

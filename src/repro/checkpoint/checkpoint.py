@@ -141,10 +141,11 @@ def save_quantized(directory: str, step: int, qtree, policy,
     """Save a SAIL-quantized (possibly mixed-precision) parameter tree.
 
     The ``QuantPolicy`` spec — including a sensitivity-calibrated
-    per-path/per-layer bit allocation — rides along in the manifest
-    extras, so ``restore_quantized`` can rebuild the exact mixed tree
-    structure (QTensor statics, blocks segmentation) from nothing but the
-    raw model's parameter template."""
+    per-path/per-layer bit allocation and the jointly allocated
+    activation precisions (``act_per_path``/``act_bits``) — rides along
+    in the manifest extras, so ``restore_quantized`` can rebuild the
+    exact mixed tree structure (QTensor statics incl. ``abits``, blocks
+    segmentation) from nothing but the raw model's parameter template."""
     extras = dict(extras or {})
     extras["quant_policy"] = policy.to_spec()
     return save(directory, step, qtree, extras)

@@ -159,10 +159,15 @@ def lut_gemv_cycles(m: SailMachine, batch: int, k: int, n: int, nbw: int,
 
 
 def lut_build_fraction(m: SailMachine, batch: int, nbw: int, wbits: int,
-                       abits: int = 8) -> float:
-    """Fraction of GEMV cycles spent constructing LUTs (paper: 3%..12%)."""
+                       abits: int = 8, kernel_level: bool = False) -> float:
+    """Fraction of GEMV cycles spent constructing LUTs (paper: 3%..12%).
+
+    ``kernel_level`` selects the same lookup pricing ``lut_gemv_cycles``
+    uses, so the fraction is consistent with the cycle total it describes
+    (kernel-level lookups are cheaper, so the build fraction is larger).
+    """
     b = lut_build_cycles(m, nbw, wbits)
-    l = batch * abits * lookup_cycles(m, wbits)
+    l = batch * abits * lookup_cycles(m, wbits, kernel_level)
     return b / (b + l)
 
 
@@ -197,31 +202,103 @@ def qtensor_bytes(k: int, n: int, bits: int, group_size: int = 128,
     return copies * (groups * wpg * n * 4 + groups * n * 4)
 
 
-def mixed_decode_cycles(units, machine: SailMachine = SailMachine(),
-                        batch: int = 8, nbw: int = 4, abits: int = 8,
-                        threads: int = 16, prt: bool = True) -> float:
-    """Projected C-SRAM cycles of one decode iteration under a mixed
-    per-matrix bit allocation: each matrix runs LUT-GEMV at its own ``ql``
-    (the lutmm instruction's per-call precision field — uniformity is a
-    policy choice, never a hardware requirement).
+def resolve_prt_discount(prt, nbw: int, wbits: int, abits: int,
+                         calib=None,
+                         machine: SailMachine = SailMachine()) -> float:
+    """Resolve the ``prt=`` switch into a lookup-cycle discount factor.
 
-    ``units``: iterable of (k, n, bits) or (k, n, bits, copies).
+      False/None   no PRT (factor 1.0)
+      True/"paper" the paper's flat 13.8% reduction
+      "measured"   per-precision discount from simulated PRT hit rates on
+                   ``calib`` activations (``repro.core.pattern.prt_discount``
+                   — synthetic batch when ``calib`` is None)
     """
-    disc = (1.0 - PAPER_CYCLE_REDUCTION) if prt else 1.0
+    if prt in (False, None, "off"):
+        return 1.0
+    if prt is True or prt == "paper":
+        return 1.0 - PAPER_CYCLE_REDUCTION
+    if prt == "measured":
+        from repro.core import pattern
+        return pattern.prt_discount(nbw, abits, wbits, calib,
+                                    machine=machine)
+    raise ValueError(f"prt must be bool, 'paper' or 'measured', got {prt!r}")
+
+
+def _best_nbw_and_cycles(k: int, n: int, wbits: int, abits: int,
+                         batch: int, threads: int, machine: SailMachine,
+                         prt, calib) -> tuple:
+    best, best_c = 2, float("inf")
+    for nbw in (1, 2, 3, 4):
+        disc = resolve_prt_discount(prt, nbw, wbits, abits, calib, machine)
+        c = lut_gemv_cycles(machine, batch, k, n, nbw, wbits, abits,
+                            threads, disc)
+        if c < best_c:
+            best, best_c = nbw, c
+    return best, best_c
+
+
+def best_nbw_for_unit(k: int, n: int, wbits: int, abits: int = 8,
+                      batch: int = 8, threads: int = 16,
+                      machine: SailMachine = SailMachine(),
+                      prt=True, calib=None) -> int:
+    """Cycle-optimal NBW for ONE [K, N] matrix at its allocated precision.
+
+    A mixed allocation should not inherit the model-global ``best_nbw``:
+    the build/lookup trade-off shifts with both the matrix shape (K sets
+    the group count the build cost amortizes over) and the (wbits, abits)
+    pair — and under ``prt="measured"`` the hit rate itself depends on
+    NBW.  Small per-call cost, exhaustive over the 4 NBW values.
+    """
+    return _best_nbw_and_cycles(k, n, wbits, abits, batch, threads,
+                                machine, prt, calib)[0]
+
+
+def mixed_decode_cycles(units, machine: SailMachine = SailMachine(),
+                        batch: int = 8, nbw=4, abits: int = 8,
+                        threads: int = 16, prt=True, calib=None) -> float:
+    """Projected C-SRAM cycles of one decode iteration under a mixed
+    per-matrix bit allocation: each matrix runs LUT-GEMV at its own
+    ``(ql, abits)`` (the lutmm instruction's per-call precision fields —
+    uniformity is a policy choice, never a hardware requirement).
+
+    ``units``: iterable of (k, n, wbits), (k, n, wbits, copies), or
+    (k, n, wbits, abits, copies) — a None abits (f32-activation serving)
+    is priced at the global ``abits`` default.
+    ``nbw``: a fixed NBW, or "auto" to pick :func:`best_nbw_for_unit`
+    per matrix.
+    ``prt``: see :func:`resolve_prt_discount`; "measured" replaces the
+    flat 13.8% constant with per-(nbw, abits, ql) simulated hit rates on
+    ``calib`` activations.
+    """
+    if prt == "measured":
+        from repro.core import pattern
+        calib = pattern.canonical_calib(calib)
     total = 0.0
     for u in units:
-        k, n, bits = u[0], u[1], u[2]
-        copies = u[3] if len(u) > 3 else 1
-        total += copies * lut_gemv_cycles(machine, batch, k, n, nbw, bits,
-                                          abits, threads, disc)
+        k, n, wbits = u[0], u[1], u[2]
+        if len(u) >= 5:
+            ab = u[3] if u[3] is not None else abits
+            copies = u[4]
+        else:
+            ab = abits
+            copies = u[3] if len(u) > 3 else 1
+        if nbw == "auto":
+            _, unit_cycles = _best_nbw_and_cycles(
+                k, n, wbits, ab, batch, threads, machine, prt, calib)
+        else:
+            disc = resolve_prt_discount(prt, nbw, wbits, ab, calib,
+                                        machine)
+            unit_cycles = lut_gemv_cycles(machine, batch, k, n, nbw,
+                                          wbits, ab, threads, disc)
+        total += copies * unit_cycles
     return total
 
 
 def sail_tokens_per_second(model: ModelSpec, ql: int, threads: int = 16,
                            batch: int = 1, nbw: Optional[int] = None,
                            abits: int = 8, machine: SailMachine = SailMachine(),
-                           prt: bool = True, inmem_typeconv: bool = True,
-                           use_lut: bool = True) -> float:
+                           prt=True, inmem_typeconv: bool = True,
+                           use_lut: bool = True, calib=None) -> float:
     """Aggregate decode throughput (tokens/s summed over the batch).
 
     Tensor-level scheduling loads each layer's weights once per iteration
@@ -229,11 +306,15 @@ def sail_tokens_per_second(model: ModelSpec, ql: int, threads: int = 16,
     stream cost is paid once per iteration while compute scales with B.
     The ping-pong pipeline overlaps the two: t_iter = max(t_dram, t_comp)
     + un-overlapped de-/quant tail.
+
+    ``prt``: True/"paper" applies the published flat 13.8% reduction;
+    "measured" simulates the PRT hit rate at this (nbw, abits, ql) on
+    ``calib`` activations (see :func:`resolve_prt_discount`).
     """
     m = machine
     if nbw is None:
-        nbw = best_nbw(model, ql, threads, batch, abits, m)
-    prt_discount = (1.0 - PAPER_CYCLE_REDUCTION) if prt else 1.0
+        nbw = best_nbw(model, ql, threads, batch, abits, m, prt, calib)
+    prt_discount = resolve_prt_discount(prt, nbw, ql, abits, calib, m)
 
     t_dram = model_weight_bytes(model, ql) / (m.dram_bw * m.dram_efficiency)
 
@@ -270,12 +351,17 @@ def sail_tokens_per_second(model: ModelSpec, ql: int, threads: int = 16,
 
 
 def best_nbw(model: ModelSpec, ql: int, threads: int, batch: int,
-             abits: int = 8, machine: SailMachine = SailMachine()) -> int:
-    """SAIL jointly optimizes (NBW, bit-width, batch) (Sec. III-C)."""
+             abits: int = 8, machine: SailMachine = SailMachine(),
+             prt=True, calib=None) -> int:
+    """SAIL jointly optimizes (NBW, bit-width, batch) (Sec. III-C).
+
+    ``prt``/``calib`` select the pricing mode the candidates are ranked
+    under — a measured-mode caller must not have its NBW picked by the
+    flat paper discount (the hit rate itself depends on NBW)."""
     best, best_t = 2, -1.0
     for nbw in (1, 2, 3, 4):
         t = sail_tokens_per_second(model, ql, threads, batch, nbw, abits,
-                                   machine)
+                                   machine, prt=prt, calib=calib)
         if t > best_t:
             best, best_t = nbw, t
     return best

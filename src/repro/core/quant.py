@@ -28,6 +28,11 @@ import numpy as np
 
 SUPPORTED_BITS = (2, 3, 4, 5, 6, 8)
 
+# Activation precisions the ``lutmm`` instruction parameterizes (the
+# second precision field next to ``ql``).  ``None`` anywhere an abits is
+# accepted means "serve f32 activations" (no activation quantization).
+SUPPORTED_ABITS = (4, 6, 8)
+
 
 def values_per_word(bits: int) -> int:
     """Number of b-bit codes packed per uint32 word."""
@@ -137,6 +142,10 @@ class QTensor:
       scales   : f32    [K // G, N]     per-group scales
       codebook : f32    [2**bits]       dequant LUT (uniform grid by default)
       bits, group_size, k: static metadata.
+      abits    : activation precision this matmul serves at (the lutmm
+                 instruction's second precision field); None keeps f32
+                 activations.  ``mm`` fake-quantizes activations per token
+                 at ``abits`` before dispatching when set.
     """
     packed: jax.Array
     scales: jax.Array
@@ -144,6 +153,8 @@ class QTensor:
     bits: int = dataclasses.field(metadata=dict(static=True))
     group_size: int = dataclasses.field(metadata=dict(static=True))
     k: int = dataclasses.field(metadata=dict(static=True))
+    abits: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def n(self) -> int:

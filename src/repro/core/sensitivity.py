@@ -16,13 +16,22 @@ serving feature:
   * ``allocate_bits`` — greedy solver for "minimize total predicted error
     subject to a byte budget" over ``SUPPORTED_BITS``, using the exact
     QTensor byte accounting (packed words + group scales + codebook).
+  * ``activation_sensitivity`` — the activation-precision twin: probe
+    ONE unit's matmul inputs at each candidate ``abits`` (gate-masked
+    ``ActQuantWeight`` wrapper, one compiled forward per path) against
+    the same exact center.
   * ``calibrate_policy`` — end-to-end: score, solve, and return a
     ``QuantPolicy`` whose ``allocation`` carries per-path (and per-layer)
-    bits; ``quantize_params`` then emits a mixed tree.
+    bits; ``quantize_params`` then emits a mixed tree.  With
+    ``abits_candidates`` it allocates ``(wbits, abits)`` JOINTLY under a
+    projected-cycles budget (``allocate_bits_joint``), accepts held-out
+    ``calib_batches``, and caps scan segmentation via ``max_segments``.
   * ``parse_bit_policy`` / ``resolve_bit_policy`` — the serving-facing
     spec surface (``EngineConfig.bit_policy``, ``--bit-policy``):
-    ``"uniform:<b>"``, ``"rules:<regex>=<b>,..."``, ``"auto:q<b>"``
-    (byte budget matched to uniform b-bit), ``"auto:<f>bpw"``.
+    ``"uniform:<b>[a<ab>]"``, ``"rules:<regex>=<b>[a<ab>],..."``,
+    ``"auto:q<b>"`` (byte budget matched to uniform b-bit),
+    ``"auto:<f>bpw"``, ``"auto:q<b>a<ab>[,prt=measured][,maxseg=<n>]"``
+    (joint mode at the uniform (b, ab) cycle budget).
 """
 from __future__ import annotations
 
@@ -32,9 +41,10 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quant
-from repro.core.quant import SUPPORTED_BITS
+from repro.core.quant import SUPPORTED_ABITS, SUPPORTED_BITS
 
 # A unit key: (keystr path, layer index or None for non-stacked leaves).
 UnitKey = Tuple[str, Optional[int]]
@@ -44,13 +54,16 @@ UnitKey = Tuple[str, Optional[int]]
 class Unit:
     """One independently allocatable weight: a 2-D leaf or one layer slice
     of a scan-stacked leaf.  ``copies`` folds extra leading dims (MoE
-    experts) into the byte accounting."""
+    experts) into the byte accounting.  ``aerrors`` (activation-precision
+    -> predicted output error, from ``activation_sensitivity``) is only
+    present for joint (wbits, abits) allocation."""
     path: str
     layer: Optional[int]
     k: int
     n: int
     copies: int
-    errors: Mapping[int, float]    # bits -> predicted output error
+    errors: Mapping[int, float]    # wbits -> predicted output error
+    aerrors: Optional[Mapping[Optional[int], float]] = None
 
     @property
     def key(self) -> UnitKey:
@@ -65,6 +78,18 @@ class AllocationReport:
     budget_bytes: int
     predicted_error: float
     feasible: bool                 # min-bits config fit inside the budget
+
+
+@dataclasses.dataclass(frozen=True)
+class JointAllocationReport:
+    """Joint (wbits, abits) solver diagnostics."""
+    bits_by_unit: Dict[UnitKey, Tuple[int, int]]   # key -> (wbits, abits)
+    bytes_total: int
+    cycles_total: float
+    byte_budget: Optional[int]
+    cycle_budget: float
+    predicted_error: float
+    feasible: bool
 
 
 def unit_bytes(k: int, n: int, bits: int, group_size: int,
@@ -225,6 +250,76 @@ def output_sensitivity(params, cfg, tokens, policy,
     return scores
 
 
+def activation_sensitivity(params, cfg, tokens, policy,
+                           abits_candidates: Sequence[int] = SUPPORTED_ABITS,
+                           per_layer: bool = True
+                           ) -> Dict[UnitKey, Dict[Optional[int], float]]:
+    """Activation-precision scores, exact-centered like the weight probes.
+
+    Each score is the TRUE end-to-end logit MSE (vs the f32 reference) of
+    the model with every eligible weight at the uniform baseline precision
+    and ONLY the probed unit's *matmul inputs* quantized to the candidate
+    ``abits`` (via the ``ActQuantWeight`` wrapper, whose per-layer gate
+    lets one compiled forward probe every layer of a scan stack).  The
+    ``None`` entry (f32 activations — the center) is the baseline error
+    itself, so a joint allocation moving few units stays second-order
+    accurate exactly like the weight side.
+    """
+    from repro.models import lm
+    from repro.models.sail_linear import ActQuantWeight
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    fwd = jax.jit(lambda p: lm.forward(p, tokens, cfg)[0])
+    ref = fwd(params)
+
+    eligible = {pstr: stacked
+                for pstr, _, stacked in quantizable_units(params, policy)}
+    base_bits = policy.bits
+    base_cb = policy.codebook_for(base_bits)
+    base_leaves = []
+    for path, w in flat:
+        pstr = jax.tree_util.keystr(path)
+        base_leaves.append(fake_quant(w, base_bits, policy.group_size,
+                                      base_cb)
+                           if pstr in eligible else w)
+
+    err_base = float(jnp.mean(
+        (fwd(jax.tree_util.tree_unflatten(treedef, base_leaves)) - ref)
+        ** 2))
+
+    def probe(idx: int, gate, abits: int) -> float:
+        swapped = list(base_leaves)
+        swapped[idx] = ActQuantWeight(w=base_leaves[idx],
+                                      gate=jnp.asarray(gate, jnp.float32),
+                                      abits=int(abits))
+        logits = fwd(jax.tree_util.tree_unflatten(treedef, swapped))
+        return float(jnp.mean((logits - ref) ** 2))
+
+    scores: Dict[UnitKey, Dict[Optional[int], float]] = {}
+    for idx, (path, w) in enumerate(flat):
+        pstr = jax.tree_util.keystr(path)
+        if pstr not in eligible:
+            continue
+        stacked = eligible[pstr]
+        if stacked and per_layer:
+            n_layers = w.shape[0]
+            for layer in range(n_layers):
+                errs: Dict[Optional[int], float] = {None: err_base}
+                gate = np.zeros((n_layers,), np.float32)
+                gate[layer] = 1.0
+                for ab in abits_candidates:
+                    errs[int(ab)] = probe(idx, gate, ab)
+                scores[(pstr, layer)] = errs
+        else:
+            errs = {None: err_base}
+            gate = (np.ones((w.shape[0],), np.float32)
+                    if stacked else np.float32(1.0))
+            for ab in abits_candidates:
+                errs[int(ab)] = probe(idx, gate, ab)
+            scores[(pstr, None)] = errs
+    return scores
+
+
 # ---------------------------------------------------------------------------
 # greedy budgeted allocation
 # ---------------------------------------------------------------------------
@@ -343,12 +438,202 @@ def allocate_bits(units: Sequence[Unit], budget_bytes: int,
                             predicted_error=predicted, feasible=True)
 
 
-def _allocation_from_units(bits_by_unit: Mapping[UnitKey, int]):
-    """{(path, layer): bits} -> BitAllocation (tuples for stacked paths)."""
-    from repro.models.sail_linear import BitAllocation
+def allocate_bits_joint(units: Sequence[Unit], cycle_budget: float,
+                        group_size: int,
+                        byte_budget: Optional[int] = None,
+                        bits_candidates: Sequence[int] = SUPPORTED_BITS,
+                        abits_candidates: Sequence[int] = SUPPORTED_ABITS,
+                        pinned: Optional[Mapping[UnitKey, int]] = None,
+                        pinned_act: Optional[Mapping[UnitKey, int]] = None,
+                        batch: int = 8, threads: int = 16,
+                        machine=None, prt="paper", calib=None
+                        ) -> JointAllocationReport:
+    """Joint (wbits, abits) allocation under a projected-cycles budget.
+
+    SAIL's lutmm takes BOTH precisions per call, so the allocator searches
+    the product grid: minimize total predicted error (weight probe +
+    activation probe, both exact-centered) subject to
+    ``mixed_decode_cycles <= cycle_budget`` and optionally
+    ``bytes <= byte_budget``.  Every unit is priced at its own
+    cycle-optimal NBW (``best_nbw_for_unit``) and, under
+    ``prt="measured"``, its own simulated PRT hit rate — this is what
+    lets the solver trade activation width (pure cycles) against weight
+    width (cycles + bytes) where each actually pays.
+
+    Same solver shape as :func:`allocate_bits`: multi-start greedy climbs
+    (best error reduction per normalized budget use) followed by pairwise
+    down/up swap refinement, so tight budgets where a monotone climb
+    cannot move still reach mixed assignments.
+    """
+    from repro.core import cost_model as cm
+    from repro.core import pattern as _pattern
+    m = machine or cm.SailMachine()
+    calib = _pattern.canonical_calib(calib)
+    wcand = sorted(set(int(b) for b in bits_candidates))
+    acand = sorted(set(int(b) for b in abits_candidates))
+    states = [(wb, ab) for wb in wcand for ab in acand]
+    pinned = dict(pinned or {})
+    pinned_act = dict(pinned_act or {})
+
+    for u in units:
+        if u.aerrors is None:
+            raise ValueError(f"unit {u.key} has no activation scores "
+                             "(aerrors) — run activation_sensitivity")
+
+    bytes_tab: Dict[Tuple[UnitKey, int], int] = {}
+    cyc_tab: Dict[Tuple[UnitKey, Tuple[int, int]], float] = {}
+    for u in units:
+        for wb in wcand:
+            bytes_tab[(u.key, wb)] = unit_bytes(u.k, u.n, wb, group_size,
+                                                u.copies)
+        for s in states:
+            wb, ab = s
+            _, cyc = cm._best_nbw_and_cycles(u.k, u.n, wb, ab, batch,
+                                             threads, m, prt, calib)
+            cyc_tab[(u.key, s)] = u.copies * cyc
+
+    def err(u: Unit, s: Tuple[int, int]) -> float:
+        return u.errors[s[0]] + u.aerrors[s[1]]
+
+    def unit_states(u: Unit):
+        wfix = pinned.get(u.key)
+        afix = pinned_act.get(u.key)
+        return [(wb, ab) for wb, ab in states
+                if (wfix is None or wb == wfix)
+                and (afix is None or ab == afix)]
+
+    free = [u for u in units
+            if len(unit_states(u)) > 1]
+
+    def totals(current):
+        by = sum(bytes_tab[(k, s[0])] for k, s in current.items())
+        cy = sum(cyc_tab[(k, s)] for k, s in current.items())
+        return by, cy
+
+    def fits(by, cy):
+        return (cy <= cycle_budget
+                and (byte_budget is None or by <= byte_budget))
+
+    def norm_cost(key, s) -> float:
+        c = cyc_tab[(key, s)] / max(cycle_budget, 1e-9)
+        if byte_budget is not None:
+            c += bytes_tab[(key, s[0])] / max(byte_budget, 1)
+        return c
+
+    def min_state(u: Unit):
+        return min(unit_states(u), key=lambda s: (norm_cost(u.key, s),
+                                                  err(u, s)))
+
+    def climb(start: Tuple[int, int]):
+        current: Dict[UnitKey, Tuple[int, int]] = {}
+        for u in units:
+            opts = unit_states(u)
+            current[u.key] = start if start in opts else min_state(u)
+        by, cy = totals(current)
+        if not fits(by, cy):
+            return None
+        while True:
+            best = None  # (ratio, de, key, state)
+            for u in free:
+                cur = current[u.key]
+                e_cur = err(u, cur)
+                c_cur = norm_cost(u.key, cur)
+                for s in unit_states(u):
+                    if s == cur:
+                        continue
+                    de = e_cur - err(u, s)
+                    if de <= 0:
+                        continue
+                    nby = by + bytes_tab[(u.key, s[0])] - \
+                        bytes_tab[(u.key, cur[0])]
+                    ncy = cy + cyc_tab[(u.key, s)] - cyc_tab[(u.key, cur)]
+                    if not fits(nby, ncy):
+                        continue
+                    dc = norm_cost(u.key, s) - c_cur
+                    ratio = de / dc if dc > 1e-12 else float("inf")
+                    pick = (ratio, de, u.key, s)
+                    if best is None or pick > best:
+                        best = pick
+            if best is None:
+                break
+            _, _, key, s = best
+            by += bytes_tab[(key, s[0])] - bytes_tab[(key, current[key][0])]
+            cy += cyc_tab[(key, s)] - cyc_tab[(key, current[key])]
+            current[key] = s
+        by, cy = swap_refine(current, by, cy)
+        predicted = sum(err(u, current[u.key]) for u in units)
+        return current, by, cy, predicted
+
+    def swap_refine(current, by, cy):
+        """Pairwise trades: move one unit to a cheaper state to fund a
+        more accurate state elsewhere (e.g. drop one layer's abits to
+        afford another layer's extra weight bit at a tight cycle
+        budget)."""
+        while True:
+            best = None  # (net_err_delta, key_d, s_d, key_u, s_u)
+            for ud in free:
+                cur_d = current[ud.key]
+                for sd in unit_states(ud):
+                    d_by = bytes_tab[(ud.key, sd[0])] - \
+                        bytes_tab[(ud.key, cur_d[0])]
+                    d_cy = cyc_tab[(ud.key, sd)] - cyc_tab[(ud.key, cur_d)]
+                    if d_cy >= 0 and d_by >= 0:
+                        continue   # not a funding move
+                    loss = err(ud, sd) - err(ud, cur_d)
+                    for uu in free:
+                        if uu.key == ud.key:
+                            continue
+                        cur_u = current[uu.key]
+                        for su in unit_states(uu):
+                            gain = err(uu, cur_u) - err(uu, su)
+                            if gain <= 0:
+                                continue
+                            nby = by + d_by + \
+                                bytes_tab[(uu.key, su[0])] - \
+                                bytes_tab[(uu.key, cur_u[0])]
+                            ncy = cy + d_cy + \
+                                cyc_tab[(uu.key, su)] - \
+                                cyc_tab[(uu.key, cur_u)]
+                            if not fits(nby, ncy):
+                                continue
+                            net = loss - gain
+                            pick = (net, ud.key, sd, uu.key, su)
+                            if net < -1e-15 and (best is None
+                                                 or pick < best):
+                                best = pick
+            if best is None:
+                return by, cy
+            _, kd, sd, ku, su = best
+            by += (bytes_tab[(kd, sd[0])] - bytes_tab[(kd, current[kd][0])]
+                   + bytes_tab[(ku, su[0])]
+                   - bytes_tab[(ku, current[ku][0])])
+            cy += (cyc_tab[(kd, sd)] - cyc_tab[(kd, current[kd])]
+                   + cyc_tab[(ku, su)] - cyc_tab[(ku, current[ku])])
+            current[kd] = sd
+            current[ku] = su
+
+    solutions = [s for s in (climb(st) for st in states) if s is not None]
+    if not solutions:
+        current = {u.key: min_state(u) for u in units}
+        by, cy = totals(current)
+        predicted = sum(err(u, current[u.key]) for u in units)
+        return JointAllocationReport(
+            bits_by_unit=current, bytes_total=by, cycles_total=cy,
+            byte_budget=byte_budget, cycle_budget=float(cycle_budget),
+            predicted_error=predicted, feasible=False)
+    current, by, cy, predicted = min(solutions,
+                                     key=lambda s: (s[3], s[2], s[1]))
+    return JointAllocationReport(
+        bits_by_unit=current, bytes_total=by, cycles_total=cy,
+        byte_budget=byte_budget, cycle_budget=float(cycle_budget),
+        predicted_error=predicted, feasible=True)
+
+
+def _spec_map_from_units(assign: Mapping[UnitKey, int]) -> Dict[str, Any]:
+    """{(path, layer): bits} -> {path: bits | per-layer tuple}."""
     per_path: Dict[str, Any] = {}
     layered: Dict[str, Dict[int, int]] = {}
-    for (path, layer), b in bits_by_unit.items():
+    for (path, layer), b in assign.items():
         if layer is None:
             per_path[path] = int(b)
         else:
@@ -359,7 +644,142 @@ def _allocation_from_units(bits_by_unit: Mapping[UnitKey, int]):
             raise ValueError(f"allocation for {path} misses layers: "
                              f"{sorted(by_layer)}")
         per_path[path] = tuple(by_layer[i] for i in range(n_layers))
-    return BitAllocation(per_path=per_path)
+    return per_path
+
+
+def _allocation_from_units(bits_by_unit: Mapping[UnitKey, Any]):
+    """Unit assignment -> BitAllocation.
+
+    Values are scalar wbits (weight-only solve) or (wbits, abits) pairs
+    (joint solve, which also fills ``act_per_path``)."""
+    from repro.models.sail_linear import BitAllocation
+    joint = any(isinstance(b, (tuple, list))
+                for b in bits_by_unit.values())
+    if not joint:
+        return BitAllocation(per_path=_spec_map_from_units(bits_by_unit))
+    return BitAllocation(
+        per_path=_spec_map_from_units(
+            {k: s[0] for k, s in bits_by_unit.items()}),
+        act_per_path=_spec_map_from_units(
+            {k: s[1] for k, s in bits_by_unit.items()}))
+
+
+def _segment_cuts(assign: Mapping[UnitKey, Any], paths, n_layers
+                  ) -> List[int]:
+    """Layer cut points of an assignment: a cut wherever ANY stacked
+    path's state differs between adjacent layers (the same rule
+    ``sail_linear._segment_bounds`` applies to the emitted policy, so
+    the allocator's cap and the actual scan segmentation agree).
+    Equal-adjacent layers never produce a cut — the lossless merge."""
+    cuts = [0]
+    for layer in range(1, n_layers):
+        if any(assign.get((p, layer)) != assign.get((p, layer - 1))
+               for p in paths):
+            cuts.append(layer)
+    cuts.append(n_layers)
+    return cuts
+
+
+def segment_count(assign: Mapping[UnitKey, Any]) -> int:
+    """Number of uniform-precision scan segments an assignment implies.
+
+    Adjacent layers whose joint assignment matches across every stacked
+    path share a segment; non-stacked units don't segment anything."""
+    layers = sorted({k[1] for k in assign if k[1] is not None})
+    if not layers:
+        return 1
+    paths = sorted({k[0] for k in assign if k[1] is not None})
+    return len(_segment_cuts(assign, paths, max(layers) + 1)) - 1
+
+
+def enforce_max_segments(units: Sequence[Unit],
+                         assign: Dict[UnitKey, Any],
+                         max_segments: int,
+                         err_of=None) -> Dict[UnitKey, Any]:
+    """Cap the number of scan segments by merging adjacent segments.
+
+    Each uniform-bits segment compiles its own scan body, so an
+    unconstrained per-layer allocation can multiply trace/compile cost.
+    While over the cap, the adjacent segment pair whose merge costs the
+    least predicted error is coalesced: per stacked path the merged range
+    adopts whichever side's assignment raises the summed unit error
+    least.  Adjacent segments that already agree merge for free (the
+    lossless case); equal-adjacent layers never count as separate
+    segments in the first place (see :func:`segment_count`).
+
+    Merging adopts a neighboring segment's state wholesale, so the
+    result can exceed the byte/cycle budget the assignment was solved
+    under — ``calibrate_policy`` re-derives the report's ``feasible``
+    flag after capping for exactly this reason.
+    """
+    if max_segments < 1:
+        raise ValueError(f"max_segments must be >= 1, got {max_segments}")
+    if err_of is None:
+        def err_of(u, s):
+            if isinstance(s, (tuple, list)):
+                return u.errors[s[0]] + u.aerrors[s[1]]
+            return u.errors[s]
+    assign = dict(assign)
+    by_key = {u.key: u for u in units}
+    paths = sorted({k[0] for k in assign if k[1] is not None})
+    layers = sorted({k[1] for k in assign if k[1] is not None})
+    if not layers:
+        return assign
+    n_layers = max(layers) + 1
+
+    while True:
+        cuts = _segment_cuts(assign, paths, n_layers)
+        if len(cuts) - 1 <= max_segments:
+            return assign
+        best = None   # (err_delta, cut_index, {(path, layer): state})
+        for i in range(1, len(cuts) - 1):
+            a, b, c = cuts[i - 1], cuts[i], cuts[i + 1]
+            delta = 0.0
+            moves: Dict[UnitKey, Any] = {}
+            for p in paths:
+                lv, rv = assign[(p, a)], assign[(p, b)]
+                if lv == rv:
+                    continue
+                # adopt the left value over [b, c) or the right over [a, b)
+                d_left = sum(err_of(by_key[(p, layer)], lv)
+                             - err_of(by_key[(p, layer)],
+                                      assign[(p, layer)])
+                             for layer in range(b, c))
+                d_right = sum(err_of(by_key[(p, layer)], rv)
+                              - err_of(by_key[(p, layer)],
+                                       assign[(p, layer)])
+                              for layer in range(a, b))
+                if d_left <= d_right:
+                    delta += d_left
+                    for layer in range(b, c):
+                        moves[(p, layer)] = lv
+                else:
+                    delta += d_right
+                    for layer in range(a, b):
+                        moves[(p, layer)] = rv
+            if best is None or (delta, i) < best[:2]:
+                best = (delta, i, moves)
+        assign.update(best[2])
+
+
+def _tokens_from_calib_batches(calib_batches) -> jax.Array:
+    """Held-out token batches -> one [B, T] calibration array.
+
+    Accepts a single [B, T] array or a sequence of [b_i, T] arrays (e.g.
+    batches drawn from an eval data pipeline), concatenated along batch.
+    """
+    if isinstance(calib_batches, (list, tuple)):
+        arrs = [np.asarray(b) for b in calib_batches]
+        widths = {a.shape[-1] for a in arrs}
+        if len(widths) != 1:
+            raise ValueError(
+                f"calib_batches have mixed sequence lengths {widths}")
+        arr = np.concatenate([a.reshape(-1, a.shape[-1]) for a in arrs], 0)
+    else:
+        arr = np.asarray(calib_batches)
+        if arr.ndim == 1:
+            arr = arr[None]
+    return jnp.asarray(arr, jnp.int32)
 
 
 def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
@@ -368,19 +788,61 @@ def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
                      tokens=None, mode: str = "output",
                      bits_candidates: Sequence[int] = SUPPORTED_BITS,
                      per_layer: bool = True, calib_batch: int = 4,
-                     calib_seq: int = 32, scores=None):
+                     calib_seq: int = 32, scores=None,
+                     calib_batches=None,
+                     abits_candidates: Optional[Sequence[int]] = None,
+                     act_scores=None, cycle_budget: Optional[float] = None,
+                     match_uniform_abits: int = 8,
+                     prt="paper", prt_calib=None, cost_batch: int = 8,
+                     cost_threads: int = 16, machine=None,
+                     max_segments: Optional[int] = None):
     """Score sensitivities and solve the budgeted allocation.
 
-    Budget, one of: ``budget_bytes`` (absolute), ``match_uniform=b``
-    (bytes of uniform b-bit), ``budget_bpw`` (bits per quantizable
-    weight).  Paths matched by ``policy.rules`` are pinned to their rule
-    bits and charged against the budget.  Returns ``(policy_with_
-    allocation, AllocationReport)``.
-    ``scores`` (an ``output_sensitivity``/``weight_sensitivity`` result)
-    short-circuits the probing — budget sweeps score once, solve many.
+    Weight-only (default): minimize total predicted error subject to
+    ``bytes <= budget``, where the budget is one of ``budget_bytes``
+    (absolute), ``match_uniform=b`` (bytes of uniform b-bit),
+    ``budget_bpw`` (bits per quantizable weight).
+
+    Joint mode (``abits_candidates`` given): additionally allocate the
+    activation precision per unit under a projected-cycles budget —
+    ``cycle_budget`` (absolute C-SRAM cycles per decode iteration), or by
+    default the projected cycles of the uniform reference
+    ``(match_uniform or policy.bits, match_uniform_abits)`` — the joint
+    answer then Pareto-improves the weight-only one at equal projected
+    speed.  ``prt`` selects the pattern-discount model ("paper" flat
+    13.8% or "measured" per-precision hit rates); the byte budget is only
+    enforced in joint mode when ``budget_bytes`` is explicit (cycles are
+    what bound decode speed; weight bytes only bound DRAM residency).
+
+    Calibration data: ``tokens`` (explicit array), or ``calib_batches``
+    (held-out token batches from a real eval pipeline — single [B, T]
+    array or list of same-T arrays), else the synthetic default.  Under
+    ``prt="measured"`` the PRT hit rates are simulated on ``prt_calib``
+    (f32 [B, K] activations) — when omitted, the calibration tokens'
+    embedding vectors stand in for real hidden activations (capped at
+    ``cost_batch`` rows), falling back to the synthetic normal batch.
+
+    Paths matched by ``policy.rules`` / ``policy.act_rules`` are pinned
+    to their rule bits and charged against the budgets.  ``scores`` /
+    ``act_scores`` short-circuit the probing — budget sweeps score once,
+    solve many.  ``max_segments`` caps the scan-segment count of the
+    resulting per-layer allocation (merging adjacent segments at least
+    predicted-error cost; see :func:`enforce_max_segments`).
+
+    Returns ``(policy_with_allocation, AllocationReport |
+    JointAllocationReport)``.
     """
     from repro.models.sail_linear import QuantPolicy
     policy = policy or QuantPolicy()
+    joint = abits_candidates is not None
+    if not joint and prt not in ("paper", True):
+        raise ValueError(
+            f"prt={prt!r} only affects the joint (wbits, abits) cycle "
+            "budget — a weight-only allocation is priced in bytes, so "
+            "the option would be silently ignored; add a<ab> to the "
+            "spec (abits_candidates=) to enable joint mode")
+    if calib_batches is not None and tokens is None:
+        tokens = _tokens_from_calib_batches(calib_batches)
     if scores is not None:
         pass
     elif mode == "output":
@@ -389,13 +851,25 @@ def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
         scores = output_sensitivity(params, cfg, tokens, policy,
                                     bits_candidates, per_layer)
     elif mode == "weight":
+        if joint:
+            raise ValueError(
+                "joint (wbits, abits) allocation requires mode='output': "
+                "weight_sensitivity scores are weight-space SSE while "
+                "activation probes are logit MSE — summing them would let "
+                "the larger scale silently dominate the trade-off")
         scores = weight_sensitivity(params, policy, bits_candidates,
                                     per_layer)
     else:
         raise ValueError(f"mode must be 'output' or 'weight', got {mode}")
+    if joint and act_scores is None:
+        if tokens is None:
+            tokens = calibration_tokens(cfg.vocab, calib_batch, calib_seq)
+        act_scores = activation_sensitivity(params, cfg, tokens, policy,
+                                            abits_candidates, per_layer)
 
     units: List[Unit] = []
     pinned: Dict[UnitKey, int] = {}
+    pinned_act: Dict[UnitKey, int] = {}
     total_weights = 0
     for pstr, w, stacked in quantizable_units(params, policy):
         k, n = w.shape[-2:]
@@ -416,12 +890,30 @@ def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
                         f"rule ({pat!r}, {b}) pins {pstr} outside the "
                         f"scored candidates {tuple(bits_candidates)}")
                 break
+        act_rule_bits = None
+        if joint:
+            for pat, b in policy.act_rules:
+                if re.search(pat, pstr):
+                    act_rule_bits = int(b)
+                    if act_rule_bits not in abits_candidates:
+                        raise ValueError(
+                            f"act rule ({pat!r}, {b}) pins {pstr} outside "
+                            f"the scored candidates "
+                            f"{tuple(abits_candidates)}")
+                    break
         for key in keys:
             units.append(Unit(path=pstr, layer=key[1], k=k, n=n,
-                              copies=copies, errors=scores[key]))
+                              copies=copies, errors=scores[key],
+                              aerrors=(act_scores[key] if joint
+                                       else None)))
             if rule_bits is not None:
                 pinned[key] = rule_bits
+            if act_rule_bits is not None:
+                pinned_act[key] = act_rule_bits
 
+    # a bpw request is an explicit byte budget too — joint mode must not
+    # silently drop it just because it arrives in different units
+    explicit_bytes = budget_bytes is not None or budget_bpw is not None
     if budget_bytes is None:
         if match_uniform is not None:
             budget_bytes = uniform_bytes(params, policy, match_uniform)
@@ -429,9 +921,75 @@ def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
             budget_bytes = int(budget_bpw * total_weights / 8)
         else:
             budget_bytes = uniform_bytes(params, policy, policy.bits)
-    report = allocate_bits(units, budget_bytes, policy.group_size,
-                           bits_candidates, pinned)
-    allocation = _allocation_from_units(report.bits_by_unit)
+
+    if joint:
+        from repro.core import cost_model as cm
+        if prt == "measured" and prt_calib is None and tokens is not None \
+                and isinstance(params, dict) and "embed" in params:
+            # real-data stand-in for hidden activations: the calibration
+            # tokens' embedding vectors (one PRT compute-batch worth)
+            emb = np.asarray(jnp.take(params["embed"],
+                                      jnp.asarray(tokens), axis=0),
+                             np.float32)
+            prt_calib = emb.reshape(-1, emb.shape[-1])[:cost_batch]
+        if cycle_budget is None:
+            ref_wb = match_uniform if match_uniform is not None \
+                else policy.bits
+            cycle_budget = cm.mixed_decode_cycles(
+                [(u.k, u.n, ref_wb, match_uniform_abits, u.copies)
+                 for u in units],
+                machine=machine or cm.SailMachine(), batch=cost_batch,
+                nbw="auto", threads=cost_threads, prt=prt,
+                calib=prt_calib)
+        report = allocate_bits_joint(
+            units, cycle_budget, policy.group_size,
+            byte_budget=budget_bytes if explicit_bytes else None,
+            bits_candidates=bits_candidates,
+            abits_candidates=abits_candidates,
+            pinned=pinned, pinned_act=pinned_act, batch=cost_batch,
+            threads=cost_threads, machine=machine, prt=prt,
+            calib=prt_calib)
+    else:
+        report = allocate_bits(units, budget_bytes, policy.group_size,
+                               bits_candidates, pinned)
+    assign = dict(report.bits_by_unit)
+    if max_segments is not None:
+        capped = enforce_max_segments(units, assign, max_segments)
+        if capped != assign:
+            assign = capped
+            nbytes = sum(unit_bytes(
+                u.k, u.n,
+                assign[u.key][0] if joint else assign[u.key],
+                policy.group_size, u.copies) for u in units)
+            err = sum(
+                (u.errors[assign[u.key][0]] + u.aerrors[assign[u.key][1]])
+                if joint else u.errors[assign[u.key]]
+                for u in units)
+            # merging adopts a neighbor's (wider or narrower) state, so
+            # the capped assignment can leave the budgets — re-derive
+            # feasible so callers are never told a violating allocation
+            # fits
+            if joint:
+                cycles = cm.mixed_decode_cycles(
+                    [(u.k, u.n, assign[u.key][0], assign[u.key][1],
+                      u.copies) for u in units],
+                    machine=machine or cm.SailMachine(), batch=cost_batch,
+                    nbw="auto", threads=cost_threads, prt=prt,
+                    calib=prt_calib)
+                ok = (cycles <= report.cycle_budget * (1 + 1e-9)
+                      and (report.byte_budget is None
+                           or nbytes <= report.byte_budget))
+                report = dataclasses.replace(
+                    report, bits_by_unit=assign, bytes_total=nbytes,
+                    cycles_total=cycles, predicted_error=err,
+                    feasible=report.feasible and ok)
+            else:
+                report = dataclasses.replace(
+                    report, bits_by_unit=assign, bytes_total=nbytes,
+                    predicted_error=err,
+                    feasible=(report.feasible
+                              and nbytes <= report.budget_bytes))
+    allocation = _allocation_from_units(assign)
     return dataclasses.replace(policy, allocation=allocation), report
 
 
@@ -439,39 +997,95 @@ def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
 # serving-facing spec surface
 # ---------------------------------------------------------------------------
 
+def _parse_bits_token(tok: str) -> Tuple[int, Optional[int]]:
+    """``"4"`` -> (4, None); ``"4a6"`` -> (4, 6) — weight bits plus the
+    optional activation precision the lutmm call serves at."""
+    m = re.fullmatch(r"(\d+)(?:a(\d+))?", tok.strip())
+    if not m:
+        raise ValueError(f"bad bits token {tok!r} (expected <b> or <b>a<ab>)")
+    return int(m.group(1)), (int(m.group(2)) if m.group(2) else None)
+
+
 def parse_bit_policy(spec: str) -> Dict[str, Any]:
     """``--bit-policy`` / ``EngineConfig.bit_policy`` string grammar.
 
-      uniform:<b>                         one precision everywhere
-      rules:<regex>=<b>[,<regex>=<b>...]  explicit per-path overrides
+      uniform:<b>[a<ab>]                  one precision everywhere
+      rules:<regex>=<b>[a<ab>],...        explicit per-path overrides
       auto:q<b>                           allocate within uniform-b bytes
       auto:<f>bpw                         allocate within f bits/weight
+      auto:q<b>a<ab>[,<opt>...]           JOINT (wbits, abits) allocation
+                                          within the projected cycles of
+                                          uniform (b, ab)
+
+    ``a<ab>`` anywhere selects the activation precision of the lutmm call
+    (omitted = f32 activations for uniform/rules, joint mode requires
+    it).  Auto options: ``prt=paper|measured`` (pattern-discount model
+    for the cycle budget), ``maxseg=<n>`` (scan-segment cap).
     """
     kind, _, rest = spec.partition(":")
     if kind == "uniform":
-        return {"mode": "uniform", "bits": int(rest)}
+        bits, abits = _parse_bits_token(rest)
+        out: Dict[str, Any] = {"mode": "uniform", "bits": bits}
+        if abits is not None:
+            out["abits"] = abits
+        return out
     if kind == "rules":
         rules = []
+        act_rules = []
         default = None
+        default_act = None
         for part in filter(None, rest.split(",")):
             pat, _, b = part.rpartition("=")
             if not pat:
                 raise ValueError(f"bad rule {part!r} in {spec!r}")
+            bits, abits = _parse_bits_token(b)
             if pat in ("default", "*"):
-                default = int(b)
+                default, default_act = bits, abits
             else:
-                rules.append((pat, int(b)))
-        out: Dict[str, Any] = {"mode": "rules", "rules": rules}
+                rules.append((pat, bits))
+                if abits is not None:
+                    act_rules.append((pat, abits))
+        out = {"mode": "rules", "rules": rules}
+        if act_rules:
+            out["act_rules"] = act_rules
         if default is not None:
             out["bits"] = default
+        if default_act is not None:
+            out["abits"] = default_act
         return out
     if kind == "auto":
-        rest = rest.strip()
-        if rest.startswith("q"):
-            return {"mode": "auto", "match_uniform": int(rest[1:])}
-        if rest.endswith("bpw"):
-            return {"mode": "auto", "budget_bpw": float(rest[:-3])}
-        raise ValueError(f"auto budget must be q<b> or <f>bpw, got {rest!r}")
+        parts = [p.strip() for p in rest.split(",") if p.strip()]
+        if not parts:
+            raise ValueError(f"empty auto spec {spec!r}")
+        budget = parts[0]
+        out = {"mode": "auto"}
+        if budget.startswith("q"):
+            bits, abits = _parse_bits_token(budget[1:])
+            out["match_uniform"] = bits
+        elif budget.endswith("bpw"):
+            out["budget_bpw"] = float(budget[:-3])
+            abits = None
+        else:
+            raise ValueError(
+                f"auto budget must be q<b>[a<ab>] or <f>bpw, got {budget!r}")
+        if abits is not None:
+            out["abits"] = abits
+        for opt in parts[1:]:
+            key, _, val = opt.partition("=")
+            if key == "prt":
+                if val not in ("paper", "measured"):
+                    raise ValueError(f"prt must be paper|measured, got "
+                                     f"{val!r}")
+                out["prt"] = val
+            elif key == "maxseg":
+                out["max_segments"] = int(val)
+                if out["max_segments"] < 1:
+                    raise ValueError(f"maxseg must be >= 1, got {val}")
+            elif key == "a":
+                out["abits"] = int(val)
+            else:
+                raise ValueError(f"unknown auto option {opt!r} in {spec!r}")
+        return out
     raise ValueError(f"unknown bit policy {spec!r} "
                      "(expected uniform:/rules:/auto:)")
 
@@ -493,12 +1107,25 @@ def resolve_bit_policy(bit_policy, params, cfg, base):
     spec = dict(bit_policy)
     mode = spec.pop("mode", "spec")
     if mode == "uniform":
-        return dataclasses.replace(base, bits=int(spec["bits"]))
+        abits = spec.get("abits")
+        return dataclasses.replace(
+            base, bits=int(spec["bits"]),
+            act_bits=int(abits) if abits is not None else base.act_bits)
     if mode == "rules":
+        abits = spec.get("abits")
         return dataclasses.replace(
             base, bits=int(spec.get("bits", base.bits)),
-            rules=tuple((p, int(b)) for p, b in spec.get("rules", ())))
+            rules=tuple((p, int(b)) for p, b in spec.get("rules", ())),
+            act_rules=tuple((p, int(b))
+                            for p, b in spec.get("act_rules", ())),
+            act_bits=int(abits) if abits is not None else base.act_bits)
     if mode == "auto":
+        abits = spec.pop("abits", None)
+        if abits is not None:
+            # joint (wbits, abits) calibration: the cycle budget is the
+            # projected decode cost of serving uniform (b, abits)
+            spec.setdefault("abits_candidates", SUPPORTED_ABITS)
+            spec.setdefault("match_uniform_abits", int(abits))
         policy, _ = calibrate_policy(params, cfg, base, **spec)
         return policy
     if mode == "spec":

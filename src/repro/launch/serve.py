@@ -29,9 +29,13 @@ def main() -> None:
     ap.add_argument("--cache-len", type=int, default=512)
     ap.add_argument("--no-quant-kv", action="store_true")
     ap.add_argument("--bit-policy", default=None,
-                    help="mixed-precision spec: uniform:<b> | "
-                         "rules:<regex>=<b>,... | auto:q<b> | auto:<f>bpw "
-                         "(sensitivity-calibrated per-layer allocation)")
+                    help="mixed-precision spec: uniform:<b>[a<ab>] | "
+                         "rules:<regex>=<b>[a<ab>],... | auto:q<b> | "
+                         "auto:<f>bpw | auto:q<b>a<ab>[,prt=measured]"
+                         "[,maxseg=<n>] — a<ab> sets the lutmm activation "
+                         "precision; auto:q<b>a<ab> jointly allocates "
+                         "(wbits, abits) per layer within the projected "
+                         "cycles of uniform (b, ab)")
     ap.add_argument("--mode", choices=("continuous", "batch"),
                     default="continuous")
     ap.add_argument("--prefill-budget", type=int, default=None,

@@ -62,10 +62,17 @@ def _layer_slice(stacked, i):
 #
 # ``quantize_params`` with a per-layer bit allocation emits
 # ``params["blocks"]`` as a LIST of scan-stacked trees (consecutive layers
-# sharing one static bit width each), because a single ``lax.scan`` can
-# only carry one static ``bits`` per stacked leaf.  All model entry points
-# below scan the segments back-to-back; a plain (non-list) blocks tree is
-# the 1-segment case and lowers exactly as before.
+# sharing one static precision each), because a single ``lax.scan`` can
+# only carry one static ``bits``/``abits`` pair per stacked leaf — a
+# segment is maximal in the JOINT (wbits, abits) assignment, so an
+# activation-precision change cuts the stack exactly like a weight one.
+# All model entry points below scan the segments back-to-back; a plain
+# (non-list) blocks tree is the 1-segment case and lowers exactly as
+# before.  Each segment traces and compiles its own scan body, so
+# compile cost grows linearly with segment count — the allocator's
+# ``max_segments`` cap (repro.core.sensitivity.enforce_max_segments)
+# exists to bound it, and tests/test_joint_precision.py pins the
+# scan-body-per-segment invariant.
 
 def block_segments(params) -> list:
     """params["blocks"] as a list of stacked segment trees."""

@@ -27,6 +27,15 @@ per-layer tuple on a ``blocks`` leaf splits the stack into maximal
 uniform-bits *segments*: ``params["blocks"]`` becomes a list of stacked
 trees the model applies back-to-back (``repro.models.lm`` scans each
 segment; single-segment trees keep today's exact semantics).
+
+Activation precision: the ``lutmm`` instruction parameterizes *both* the
+weight (``ql``) and the activation precision per call, so the policy also
+resolves ``abits`` per path (``act_rules`` / ``allocation.act_per_path`` /
+``act_bits``).  A quantized leaf carries its allocated ``abits`` as static
+metadata and ``mm`` fake-quantizes the incoming activations per token at
+that precision (``abits=None`` keeps today's f32-activation semantics).
+Per-layer ``abits`` tuples segment the scan stack exactly like weight
+bits do — a segment is maximal in the *joint* (wbits, abits) assignment.
 """
 from __future__ import annotations
 
@@ -37,13 +46,14 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import (SUPPORTED_BITS, QTensor, _uniform_codebook,
-                              nf_codebook, quantize)
+from repro.core.quant import (SUPPORTED_ABITS, SUPPORTED_BITS, QTensor,
+                              _uniform_codebook, nf_codebook, quantize,
+                              quantize_activations)
 
 __all__ = [
-    "BitAllocation", "QuantPolicy", "QTensor", "StackedQTensor",
-    "dequantize_any", "einsum_q", "mm", "nf_codebook", "quantize_params",
-    "set_backend",
+    "ActQuantWeight", "BitAllocation", "QuantPolicy", "QTensor",
+    "StackedQTensor", "act_fake_quant", "dequantize_any", "einsum_q", "mm",
+    "nf_codebook", "quantize_params", "set_backend",
 ]
 
 # Module-level backend switch: "jnp" (XLA path — used under pjit / dry-run)
@@ -57,13 +67,40 @@ def set_backend(backend: str) -> None:
     _BACKEND = backend
 
 
+def act_fake_quant(x: jax.Array, abits: int) -> jax.Array:
+    """Per-token activation quantize->dequantize at ``abits`` — the error
+    a SAIL matmul serving ``lutmm(..., abits)`` would see on its inputs.
+    Works for any leading shape (the last axis is the token's feature
+    vector)."""
+    xq, xs = quantize_activations(x, abits)
+    return (xq.astype(jnp.float32) * xs).astype(x.dtype)
+
+
+def _apply_act_quant(x: jax.Array, w: Any):
+    """Shared activation-precision dispatch for ``mm``/``einsum_q``.
+
+    Unwraps an ``ActQuantWeight`` probe (gate-blended fake-quant, so one
+    scan pass can probe a single layer of a stack) and applies the
+    allocated ``abits`` of a quantized weight to float inputs.  Returns
+    the (possibly quantized) activations and the unwrapped weight."""
+    if isinstance(w, ActQuantWeight):
+        fq = act_fake_quant(x, w.abits)
+        x = x + w.gate.astype(x.dtype) * (fq - x)
+        w = w.w
+    elif (isinstance(w, (QTensor, StackedQTensor)) and w.abits is not None
+          and not jnp.issubdtype(x.dtype, jnp.integer)):
+        x = act_fake_quant(x, w.abits)
+    return x, w
+
+
 def mm(x: jax.Array, w: Any) -> jax.Array:
     """x [..., K] @ w [K, N] with QTensor dispatch."""
+    x, w = _apply_act_quant(x, w)
     if isinstance(w, StackedQTensor) and w.packed.ndim == 2:
         # a scan-sliced layer: reinterpret as a plain QTensor
         w = QTensor(packed=w.packed, scales=w.scales,
                     codebook=w.codebook, bits=w.bits,
-                    group_size=w.group_size, k=w.k)
+                    group_size=w.group_size, k=w.k, abits=w.abits)
     if isinstance(w, QTensor):
         from repro.kernels.lut_gemv.ops import lut_matmul
         lead = x.shape[:-1]
@@ -74,34 +111,72 @@ def mm(x: jax.Array, w: Any) -> jax.Array:
     return x @ w
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ActQuantWeight:
+    """Probe wrapper: a plain weight whose *matmul inputs* are quantized.
+
+    Used by ``repro.core.sensitivity.activation_sensitivity`` to measure
+    the end-to-end error of quantizing one unit's activations at a
+    candidate ``abits`` while everything else stays at the baseline.  The
+    ``gate`` array (scalar, or [L] for scan-stacked weights — scan slices
+    both fields in lockstep) turns the fake-quant on per layer, so one
+    compiled forward probes every layer of a stack."""
+    w: jax.Array
+    gate: jax.Array
+    abits: int = dataclasses.field(metadata=dict(static=True))
+
+
 # Bits for one path: a scalar, or one entry per scan-stacked layer.
 BitsSpec = Union[int, Tuple[int, ...]]
+
+
+def _bits_spec_to_json(per_path: Mapping[str, BitsSpec]) -> Dict[str, Any]:
+    return {p: (list(map(int, b)) if isinstance(b, (tuple, list))
+                else int(b))
+            for p, b in per_path.items()}
+
+
+def _bits_spec_from_json(spec: Mapping[str, Any]) -> Dict[str, BitsSpec]:
+    return {p: (tuple(int(x) for x in b) if isinstance(b, (list, tuple))
+                else int(b))
+            for p, b in spec.items()}
 
 
 @dataclasses.dataclass(frozen=True)
 class BitAllocation:
     """Per-path bit-width assignment (the allocator's output).
 
-    ``per_path`` maps ``jax.tree_util.keystr`` paths to a scalar bits or,
-    for scan-stacked ``blocks`` leaves, a per-layer tuple.  JSON-safe via
-    ``to_spec``/``from_spec`` so checkpoints can embed the allocation.
+    ``per_path`` maps ``jax.tree_util.keystr`` paths to a scalar weight
+    bits or, for scan-stacked ``blocks`` leaves, a per-layer tuple.
+    ``act_per_path`` carries the jointly allocated activation precision
+    the same way (absent paths keep the policy's ``act_bits`` fallback).
+    JSON-safe via ``to_spec``/``from_spec`` so checkpoints can embed the
+    allocation; the legacy flat weight-only spec format still parses.
     """
     per_path: Mapping[str, BitsSpec]
+    act_per_path: Mapping[str, BitsSpec] = dataclasses.field(
+        default_factory=dict)
 
     def lookup(self, path: str) -> Optional[BitsSpec]:
         return self.per_path.get(path)
 
+    def lookup_act(self, path: str) -> Optional[BitsSpec]:
+        return self.act_per_path.get(path)
+
     def to_spec(self) -> Dict[str, Any]:
-        return {p: (list(map(int, b)) if isinstance(b, (tuple, list))
-                    else int(b))
-                for p, b in self.per_path.items()}
+        if not self.act_per_path:
+            return _bits_spec_to_json(self.per_path)   # legacy flat format
+        return {"weights": _bits_spec_to_json(self.per_path),
+                "activations": _bits_spec_to_json(self.act_per_path)}
 
     @staticmethod
     def from_spec(spec: Mapping[str, Any]) -> "BitAllocation":
-        return BitAllocation(per_path={
-            p: (tuple(int(x) for x in b) if isinstance(b, (list, tuple))
-                else int(b))
-            for p, b in spec.items()})
+        if "weights" in spec and "activations" in spec:
+            return BitAllocation(
+                per_path=_bits_spec_from_json(spec["weights"]),
+                act_per_path=_bits_spec_from_json(spec["activations"]))
+        return BitAllocation(per_path=_bits_spec_from_json(spec))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +190,10 @@ class QuantPolicy:
     codebook: Optional[Any] = None
     rules: Tuple[Tuple[str, int], ...] = ()     # (regex, bits), first match
     allocation: Optional[BitAllocation] = None  # sensitivity allocator output
+    # activation precision: uniform fallback (None = f32 activations) and
+    # explicit per-path overrides, resolved like the weight side
+    act_bits: Optional[int] = None
+    act_rules: Tuple[Tuple[str, int], ...] = ()
 
     def bits_for(self, path: str) -> BitsSpec:
         """Resolve the bit width for one parameter path.
@@ -130,6 +209,20 @@ class QuantPolicy:
                 return got
         return self.bits
 
+    def abits_for(self, path: str) -> Optional[BitsSpec]:
+        """Resolve the activation precision for one parameter path
+        (``None`` = keep f32 activations for this matmul).  Same
+        precedence as the weight side: act_rules > allocation >
+        act_bits."""
+        for pat, b in self.act_rules:
+            if re.search(pat, path):
+                return _check_abits(int(b))
+        if self.allocation is not None:
+            got = self.allocation.lookup_act(path)
+            if got is not None:
+                return got
+        return self.act_bits
+
     def codebook_for(self, bits: int) -> Optional[jax.Array]:
         if self.codebook is None:
             return None
@@ -143,7 +236,8 @@ class QuantPolicy:
         return self.codebook
 
     def is_mixed(self) -> bool:
-        return bool(self.rules) or self.allocation is not None
+        return (bool(self.rules) or bool(self.act_rules)
+                or self.allocation is not None)
 
     def to_spec(self) -> Dict[str, Any]:
         """JSON-safe description (stored in checkpoint manifests)."""
@@ -161,7 +255,10 @@ class QuantPolicy:
                 "skip_embed": bool(self.skip_embed), "codebook": cb,
                 "rules": [[p, int(b)] for p, b in self.rules],
                 "allocation": (self.allocation.to_spec()
-                               if self.allocation is not None else None)}
+                               if self.allocation is not None else None),
+                "act_bits": (int(self.act_bits)
+                             if self.act_bits is not None else None),
+                "act_rules": [[p, int(b)] for p, b in self.act_rules]}
 
     @staticmethod
     def from_spec(spec: Mapping[str, Any]) -> "QuantPolicy":
@@ -171,6 +268,7 @@ class QuantPolicy:
         elif cb is not None:
             raise ValueError(f"unknown codebook spec {cb!r}")
         alloc = spec.get("allocation")
+        act_bits = spec.get("act_bits")
         return QuantPolicy(
             bits=int(spec.get("bits", 4)),
             group_size=int(spec.get("group_size", 128)),
@@ -179,12 +277,23 @@ class QuantPolicy:
             codebook=cb,
             rules=tuple((p, int(b)) for p, b in spec.get("rules", ())),
             allocation=(BitAllocation.from_spec(alloc)
-                        if alloc else None))
+                        if alloc else None),
+            act_bits=int(act_bits) if act_bits is not None else None,
+            act_rules=tuple((p, int(b))
+                            for p, b in spec.get("act_rules", ())))
 
 
 def _check_bits(b: int) -> int:
     if b not in SUPPORTED_BITS:
         raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {b}")
+    return b
+
+
+def _check_abits(b: Optional[int]) -> Optional[int]:
+    if b is not None and b not in SUPPORTED_ABITS:
+        raise ValueError(
+            f"activation bits must be one of {SUPPORTED_ABITS} or None, "
+            f"got {b}")
     return b
 
 
@@ -209,8 +318,10 @@ def _should_quantize_stacked(path: str, w, policy: QuantPolicy) -> bool:
 
 
 def _scalar_bits(spec: BitsSpec, path: str, offset: int,
-                 seg_len: Optional[int]) -> int:
+                 seg_len: Optional[int], check=_check_bits):
     """Resolve a BitsSpec to the single static bits of one leaf/segment."""
+    if spec is None:
+        return None
     if isinstance(spec, (tuple, list)):
         if seg_len is None:
             raise ValueError(
@@ -220,11 +331,12 @@ def _scalar_bits(spec: BitsSpec, path: str, offset: int,
             raise ValueError(
                 f"heterogeneous bits {spec} for {path} require a top-level "
                 "'blocks' stack (segmentation); got an unsplittable tree")
-        return _check_bits(int(spec[offset]))
-    return _check_bits(int(spec))
+        return check(None if spec[offset] is None else int(spec[offset]))
+    return check(int(spec))
 
 
-def _quantize_stacked(w, bits: int, policy: QuantPolicy) -> "StackedQTensor":
+def _quantize_stacked(w, bits: int, policy: QuantPolicy,
+                      abits: Optional[int] = None) -> "StackedQTensor":
     """Quantize a stacked weight per slice (vmap over leading dims).
 
     The codebook is tiled along the first leading dim so the whole
@@ -252,7 +364,7 @@ def _quantize_stacked(w, bits: int, policy: QuantPolicy) -> "StackedQTensor":
     return StackedQTensor(
         packed=packed, scales=scales,
         codebook=jnp.tile(codebook[None], (lead[0], 1)),
-        bits=bits, group_size=g, k=k)
+        bits=bits, group_size=g, k=k, abits=abits)
 
 
 def _quantize_tree(params, policy: QuantPolicy, offset: int = 0):
@@ -269,14 +381,20 @@ def _quantize_tree(params, policy: QuantPolicy, offset: int = 0):
         before += w.size * w.dtype.itemsize
         if _should_quantize(pstr, w, policy):
             b = _scalar_bits(policy.bits_for(pstr), pstr, 0, None)
+            ab = _scalar_bits(policy.abits_for(pstr), pstr, 0, None,
+                              check=_check_abits)
             qt = quantize(w, b, policy.group_size,
                           codebook=policy.codebook_for(b))
+            if ab is not None:
+                qt = dataclasses.replace(qt, abits=ab)
             after += qt.nbytes()
             out.append(qt)
         elif _should_quantize_stacked(pstr, w, policy):
             b = _scalar_bits(policy.bits_for(pstr), pstr, offset,
                              w.shape[0])
-            stacked = _quantize_stacked(w, b, policy)
+            ab = _scalar_bits(policy.abits_for(pstr), pstr, offset,
+                              w.shape[0], check=_check_abits)
+            stacked = _quantize_stacked(w, b, policy, abits=ab)
             after += stacked.packed.size * 4 + stacked.scales.size * 4
             out.append(stacked)
         else:
@@ -288,7 +406,10 @@ def _quantize_tree(params, policy: QuantPolicy, offset: int = 0):
 def _segment_bounds(params, policy: QuantPolicy) -> Optional[List[int]]:
     """Layer cut points implied by per-layer bit specs on blocks leaves.
 
-    Returns None when no segmentation is needed (no per-layer spec, or all
+    Both the weight and the activation allocation segment the stack: a
+    segment is maximal in the joint (wbits, abits) assignment, since a
+    scan body can only carry one static precision pair per leaf.  Returns
+    None when no segmentation is needed (no per-layer spec, or all
     per-layer specs constant)."""
     if not (isinstance(params, dict) and "blocks" in params
             and not isinstance(params["blocks"], (list, tuple))):
@@ -302,18 +423,19 @@ def _segment_bounds(params, policy: QuantPolicy) -> Optional[List[int]]:
         if not (_should_quantize(pstr, w, policy)
                 or _should_quantize_stacked(pstr, w, policy)):
             continue
-        spec = policy.bits_for(pstr)
-        if not isinstance(spec, (tuple, list)):
-            continue
-        if w.ndim < 3:
-            raise ValueError(f"per-layer bits on non-stacked leaf {pstr}")
-        if len(spec) != w.shape[0]:
-            raise ValueError(
-                f"allocation for {pstr} has {len(spec)} entries, stack "
-                f"has {w.shape[0]} layers")
-        if n_layers is None:
-            n_layers = w.shape[0]
-        per_layer.append(tuple(spec))
+        for spec in (policy.bits_for(pstr), policy.abits_for(pstr)):
+            if not isinstance(spec, (tuple, list)):
+                continue
+            if w.ndim < 3:
+                raise ValueError(
+                    f"per-layer bits on non-stacked leaf {pstr}")
+            if len(spec) != w.shape[0]:
+                raise ValueError(
+                    f"allocation for {pstr} has {len(spec)} entries, stack "
+                    f"has {w.shape[0]} layers")
+            if n_layers is None:
+                n_layers = w.shape[0]
+            per_layer.append(tuple(spec))
     if not per_layer:
         return None
     cuts = [0]
@@ -362,12 +484,15 @@ class StackedQTensor:
     bits: int = dataclasses.field(metadata=dict(static=True))
     group_size: int = dataclasses.field(metadata=dict(static=True))
     k: int = dataclasses.field(metadata=dict(static=True))
+    abits: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     def __getitem__(self, i):
         cb = self.codebook if self.codebook.ndim == 1 else self.codebook[i]
         return QTensor(packed=self.packed[i], scales=self.scales[i],
                        codebook=cb, bits=self.bits,
-                       group_size=self.group_size, k=self.k)
+                       group_size=self.group_size, k=self.k,
+                       abits=self.abits)
 
     @property
     def n(self):
@@ -406,6 +531,7 @@ def dequantize_any(w):
 
 def einsum_q(spec: str, x: jax.Array, w: Any) -> jax.Array:
     """einsum where w may be stacked-quantized (MoE expert einsums)."""
+    x, w = _apply_act_quant(x, w)
     if isinstance(w, (QTensor, StackedQTensor)):
         w = dequantize_any(w).astype(x.dtype)
     return jnp.einsum(spec, x, w)

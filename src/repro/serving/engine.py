@@ -52,9 +52,13 @@ class EngineConfig:
     quant_kv: bool = True
     min_size: int = 1024           # quantize tensors >= this many elements
     # Mixed-precision spec: None (uniform ``ql``), a QuantPolicy, a policy
-    # spec dict, or a string — "uniform:<b>", "rules:<regex>=<b>,...",
-    # "auto:q<b>" / "auto:<f>bpw" (sensitivity-calibrated allocation on a
-    # synthetic calibration batch).  See repro.core.sensitivity.
+    # spec dict, or a string — "uniform:<b>[a<ab>]",
+    # "rules:<regex>=<b>[a<ab>],...", "auto:q<b>" / "auto:<f>bpw"
+    # (sensitivity-calibrated weight allocation), or
+    # "auto:q<b>a<ab>[,prt=measured][,maxseg=<n>]" (JOINT weight +
+    # activation allocation under the projected-cycle budget of uniform
+    # (b, ab)).  ``a<ab>`` selects the lutmm activation precision; see
+    # repro.core.sensitivity.parse_bit_policy.
     bit_policy: Any = None
     eos_token: int = -1            # -1: never stop early
     temperature: float = 0.0       # 0 = greedy

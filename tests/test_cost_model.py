@@ -98,3 +98,66 @@ def test_best_nbw_in_range():
     for ql in (2, 4, 8):
         nbw = cm.best_nbw(cm.LLAMA2_7B, ql, 16, 8)
         assert 1 <= nbw <= 4
+
+
+def test_lut_build_fraction_uses_kernel_level_lookup_cost():
+    """lut_build_fraction must price lookups at the SAME kernel level as
+    the cycle total it describes (it used to ignore the flag): kernel
+    lookups are cheaper, so the build fraction is strictly larger, and
+    both must be exactly consistent with lookup_cycles."""
+    m = cm.SailMachine()
+    f_sys = cm.lut_build_fraction(m, 8, 4, 4)
+    f_krn = cm.lut_build_fraction(m, 8, 4, 4, kernel_level=True)
+    assert f_krn > f_sys
+    b = cm.lut_build_cycles(m, 4, 4)
+    for kl, frac in ((False, f_sys), (True, f_krn)):
+        lookups = 8 * 8 * cm.lookup_cycles(m, 4, kernel_level=kl)
+        assert frac == pytest.approx(b / (b + lookups))
+
+
+def test_best_nbw_for_unit_matches_exhaustive_argmin():
+    """The per-unit pick must be the true argmin of lut_gemv_cycles over
+    NBW at that unit's exact operating point."""
+    m = cm.SailMachine()
+    flat = 1.0 - pattern.PAPER_CYCLE_REDUCTION
+    for k, n, wb, ab, batch in ((1024, 1024, 4, 8, 8),
+                                (256, 512, 2, 4, 1),
+                                (4096, 4096, 8, 6, 64)):
+        pick = cm.best_nbw_for_unit(k, n, wb, ab, batch=batch)
+        cycles = {nbw: cm.lut_gemv_cycles(m, batch, k, n, nbw, wb, ab,
+                                          16, flat)
+                  for nbw in (1, 2, 3, 4)}
+        assert cycles[pick] == min(cycles.values()), (k, n, wb, ab, batch)
+
+
+def test_mixed_decode_cycles_unit_formats_consistent():
+    m = cm.SailMachine()
+    legacy3 = [(1024, 1024, 4)]
+    legacy4 = [(1024, 1024, 4, 2)]
+    with_ab = [(1024, 1024, 4, 8, 2)]
+    assert cm.mixed_decode_cycles(legacy4, m) == pytest.approx(
+        2 * cm.mixed_decode_cycles(legacy3, m))
+    assert cm.mixed_decode_cycles(with_ab, m) == pytest.approx(
+        cm.mixed_decode_cycles(legacy4, m))   # abits=8 == default pricing
+    none_ab = [(1024, 1024, 4, None, 2)]
+    assert cm.mixed_decode_cycles(none_ab, m) == pytest.approx(
+        cm.mixed_decode_cycles(legacy4, m))
+
+
+def test_mixed_decode_cycles_monotone_in_abits():
+    m = cm.SailMachine()
+    cycles = [cm.mixed_decode_cycles([(1024, 1024, 4, ab, 1)], m)
+              for ab in (4, 6, 8)]
+    assert cycles[0] < cycles[1] < cycles[2]
+
+
+def test_mixed_decode_cycles_measured_prt_differs_from_paper():
+    units = [(512, 512, 4, 8, 1)]
+    paper = cm.mixed_decode_cycles(units, prt="paper")
+    measured = cm.mixed_decode_cycles(units, prt="measured")
+    off = cm.mixed_decode_cycles(units, prt=False)
+    assert paper < off
+    assert measured != paper
+    assert measured < off       # synthetic batches still repeat patterns
+    auto = cm.mixed_decode_cycles(units, nbw="auto", prt="measured")
+    assert auto <= measured * (1 + 1e-9)

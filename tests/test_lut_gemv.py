@@ -76,6 +76,42 @@ def test_property_exactness(nbw, b, k, n, seed):
             np.asarray(lut_gemv.reference_int_gemv(xq, wq))).all()
 
 
+@pytest.mark.parametrize("nbw", [1, 2, 3, 4])
+@pytest.mark.parametrize("abits", [4, 6, 8])
+@pytest.mark.parametrize("signed", [True, False])
+def test_kernel_precision_grid_exact(nbw, abits, signed):
+    """Every point of the (nbw, abits, signed) kernel-precision grid the
+    lutmm instruction can issue stays bit-exact vs the integer matmul —
+    the property the joint (wbits, abits) allocator relies on when it
+    varies activation precision per layer.  Random inputs per point come
+    from the _hyp sweep below; this grid pins exhaustive coverage."""
+    lim = 1 << (abits - 1)
+    lo, hi = (-lim + 1, lim) if signed else (0, 1 << abits)
+    xq = jax.random.randint(jax.random.PRNGKey(17 * nbw + abits),
+                            (5, 36), lo, hi, dtype=jnp.int32)
+    wq = jax.random.randint(jax.random.PRNGKey(abits), (36, 12), -8, 8,
+                            dtype=jnp.int32)
+    out = lut_gemv.lut_gemv(xq, wq, nbw=nbw, abits=abits, signed=signed)
+    ref = lut_gemv.reference_int_gemv(xq, wq)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+@settings(max_examples=24, deadline=None)
+@given(nbw=st.sampled_from([1, 2, 3, 4]), abits=st.sampled_from([4, 6, 8]),
+       signed=st.booleans(), b=st.integers(1, 6), k=st.integers(1, 6),
+       n=st.integers(1, 5), seed=st.integers(0, 999))
+def test_property_kernel_precision_grid(nbw, abits, signed, b, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    lim = 1 << (abits - 1)
+    lo, hi = (-lim + 1, lim) if signed else (0, 1 << abits)
+    xq = jax.random.randint(k1, (b, 8 * k), lo, hi, dtype=jnp.int32)
+    wq = jax.random.randint(k2, (8 * k, n), -16, 16, dtype=jnp.int32)
+    out = lut_gemv.lut_gemv(xq, wq, nbw=nbw, abits=abits, signed=signed)
+    assert (np.asarray(out) ==
+            np.asarray(lut_gemv.reference_int_gemv(xq, wq))).all()
+
+
 def test_op_counts():
     c = lut_gemv.lut_gemv_op_counts(batch=8, k=1024, n=1024, nbw=4)
     assert c["lut_builds"] == 256

@@ -1,0 +1,115 @@
+"""Pattern Reuse Table simulation invariants and the measured
+per-precision cycle discount that replaces the paper's flat 13.8%."""
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import pattern
+
+
+def _patterns(b, abits, g, nbw, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << nbw, size=(b, abits, g)).astype(np.int64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(2, 8), g=st.integers(1, 12),
+       nbw=st.sampled_from([1, 2, 3, 4]), abits=st.sampled_from([4, 6, 8]),
+       seed=st.integers(0, 999))
+def test_property_prt_capacity_invariants(b, g, nbw, abits, seed):
+    """An unbounded PRT hits every repeat (hits == accesses - unique);
+    any finite table hits at most that; once the table holds every
+    unique key, capacity stops mattering."""
+    pats = _patterns(b, abits, g, nbw, seed)
+    unbounded = pattern.prt_simulate(pats, entries=b * abits * g + 1)
+    assert unbounded.hits == unbounded.accesses - unbounded.unique_patterns
+    for entries in (2, 8, 32):
+        s = pattern.prt_simulate(pats, entries=entries)
+        assert s.accesses == unbounded.accesses
+        assert s.unique_patterns == unbounded.unique_patterns
+        assert s.hits <= unbounded.hits
+    full = pattern.prt_simulate(pats, entries=unbounded.unique_patterns)
+    assert full.hits == unbounded.hits
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(2, 6), g=st.integers(1, 10),
+       nbw=st.sampled_from([2, 3, 4]), seed=st.integers(0, 999))
+def test_property_prt_entries_monotone(b, g, nbw, seed):
+    """Misses are monotone non-increasing in table size on these streams:
+    the batch dimension is innermost, so each (bit-plane, group) column's
+    working set is at most ``b`` keys and growing the FIFO can only keep
+    keys resident longer."""
+    pats = _patterns(b, 8, g, nbw, seed)
+    hits = [pattern.prt_simulate(pats, entries=e).hits
+            for e in (1, 2, 4, 8, 16, 32, 64)]
+    assert all(h2 >= h1 for h1, h2 in zip(hits, hits[1:])), hits
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(2, 6), g=st.integers(1, 8),
+       nbw=st.sampled_from([1, 2, 3, 4]), seed=st.integers(0, 999))
+def test_property_duplicated_batch_hits_more(b, g, nbw, seed):
+    """A batch containing every request twice must hit at least as often
+    as the unique batch — cross-user pattern reuse is exactly what the
+    PRT exists for (paper Sec. III-D)."""
+    pats = _patterns(b, 8, g, nbw, seed)
+    dup = np.concatenate([pats, pats], axis=0)
+    rate = pattern.prt_simulate(pats).hit_rate
+    rate_dup = pattern.prt_simulate(dup).hit_rate
+    assert rate_dup >= rate - 1e-12
+
+
+def test_prt_hit_rate_narrow_patterns_repeat_more():
+    """2^nbw possible patterns: NBW=1 streams from a 2-entry alphabet and
+    must hit far more often than NBW=4 — the per-precision effect the
+    flat paper constant cannot express."""
+    calib = pattern.synthetic_activations(512, batch=8)
+    r1 = pattern.prt_hit_rate(1, 8, calib)
+    r4 = pattern.prt_hit_rate(4, 8, calib)
+    assert r1 > r4 + 0.1
+    d1 = pattern.prt_discount(1, 8, 4, calib)
+    d4 = pattern.prt_discount(4, 8, 4, calib)
+    assert d1 < d4 <= 1.0
+
+
+def test_prt_discount_scales_with_ql():
+    """A hit skips a fixed amount of C-SRAM work, so cheaper (narrow-ql)
+    lookups see a larger fractional discount."""
+    calib = pattern.synthetic_activations(512, batch=8)
+    d2 = pattern.prt_discount(4, 8, 2, calib)
+    d8 = pattern.prt_discount(4, 8, 8, calib)
+    assert d2 < d8 < 1.0
+
+
+def test_prt_discount_anchored_at_paper_point():
+    """At the paper's anchor (ql=4) a 17% hit rate must reproduce the
+    published 13.8% cycle reduction exactly."""
+    m = cm.SailMachine()
+    saved = (pattern.PAPER_CYCLE_REDUCTION / pattern.PAPER_REPEAT_RATE) * \
+        cm.lookup_cycles(m, pattern.PAPER_ANCHOR_QL)
+    got = 1.0 - pattern.PAPER_REPEAT_RATE * saved / cm.lookup_cycles(m, 4)
+    assert got == pytest.approx(1.0 - pattern.PAPER_CYCLE_REDUCTION)
+
+
+def test_prt_hit_rate_cached_and_validated():
+    calib = pattern.synthetic_activations(256, batch=4)
+    a = pattern.prt_hit_rate(2, 6, calib)
+    b = pattern.prt_hit_rate(2, 6, calib)
+    assert a == b
+    with pytest.raises(ValueError):
+        pattern.prt_hit_rate(2, 6, np.zeros((2, 3, 4), np.float32))
+
+
+def test_resolve_prt_discount_switch():
+    assert cm.resolve_prt_discount(False, 4, 4, 8) == 1.0
+    assert cm.resolve_prt_discount(None, 4, 4, 8) == 1.0
+    flat = 1.0 - pattern.PAPER_CYCLE_REDUCTION
+    assert cm.resolve_prt_discount(True, 4, 4, 8) == pytest.approx(flat)
+    assert cm.resolve_prt_discount("paper", 4, 4, 8) == pytest.approx(flat)
+    calib = pattern.synthetic_activations(256, batch=4)
+    d = cm.resolve_prt_discount("measured", 2, 4, 8, calib)
+    assert 0.0 <= d < 1.0 and abs(d - flat) > 1e-4
+    with pytest.raises(ValueError):
+        cm.resolve_prt_discount("bogus", 4, 4, 8)
