@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as C
+from repro import planning
 from repro.core import cost_model as cm
 from repro.core import pattern
 from repro.core import sensitivity as sens
@@ -63,38 +64,12 @@ def allocation_units(params, policy, with_abits=False):
     """Cost-model units per quantizable leaf under ``policy``:
     (k, n, bits, copies), or (k, n, bits, abits, copies) when
     ``with_abits`` (the joint allocation's view — a None abits is priced
-    at the 8-bit default by ``mixed_decode_cycles``)."""
-
-    def emit(k, n, wb, ab, copies):
-        if with_abits:
-            units.append((k, n, int(wb), None if ab is None else int(ab), copies))
-        else:
-            units.append((k, n, int(wb), copies))
-
-    def at(spec, i):
-        if spec is None or not isinstance(spec, (tuple, list)):
-            return spec
-        return spec[i]
-
-    units = []
-    for pstr, w, stacked in sens.quantizable_units(params, policy):
-        k, n = int(w.shape[-2]), int(w.shape[-1])
-        spec = policy.bits_for(pstr)
-        aspec = policy.abits_for(pstr)
-        if stacked:
-            per_slice = 1
-            for d in w.shape[1:-2]:
-                per_slice *= int(d)
-            layers = int(w.shape[0])
-            layered = isinstance(spec, (tuple, list)) or isinstance(aspec, (tuple, list))
-            if layered:
-                for i in range(layers):
-                    emit(k, n, at(spec, i), at(aspec, i), per_slice)
-            else:
-                emit(k, n, spec, aspec, per_slice * layers)
-        else:
-            emit(k, n, spec, aspec, 1)
-    return units
+    at the 8-bit default by ``mixed_decode_cycles``).  Thin adapter over
+    ``repro.planning.policy_units`` (the single unit-building source)."""
+    units = planning.policy_units(params, policy)
+    if with_abits:
+        return [(k, n, wb, ab, copies) for k, n, wb, ab, copies, _ in units]
+    return [(k, n, wb, copies) for k, n, wb, ab, copies, _ in units]
 
 
 def evaluate(params, policy, fwd, ref):
@@ -216,6 +191,134 @@ def run_activations(args, cfg, params, tokens, fwd, ref, base):
     return result
 
 
+def run_slo(args, cfg, params, tokens, fwd, ref, base):
+    """SLO-driven planning vs the fixed-cycle-budget baseline, DRAM term on.
+
+    The *baseline* is the pre-PlanSpec behavior: a joint (wbits, abits)
+    solve whose only constraint is the projected compute cycles of
+    uniform (4, a8) — byte-blind.  Under the DRAM-aware cost model
+    (``--dram-bw`` scales the machine's bandwidth so the tiny proxy model
+    exercises the byte bound the way a 7B model would on real hardware)
+    its extra weight bytes surface as a *lower* achieved tokens/s: the
+    byte-heavy plan can no longer hide behind the compute bound.
+
+    The *SLO plan* targets exactly the throughput the baseline actually
+    achieves (equal modeled throughput), which the Planner decomposes
+    into a cycle budget AND a byte budget.  At that operating point the
+    solver has the cycle slack the baseline wasted, so it reaches
+    strictly lower true output error — ``--check`` asserts both halves:
+    the plan meets its target under the model, at lower error than the
+    fixed-budget baseline.
+    """
+    machine = dataclasses.replace(cm.SailMachine(), dram_bw=args.dram_bw)
+    cost = planning.DecodeCostModel(machine=machine, prt=args.prt, batch=args.slo_batch)
+    print(
+        f"\n=== SLO-driven plan vs fixed cycle budget "
+        f"(prt={args.prt}, dram_bw={args.dram_bw:.2e} B/s) ==="
+    )
+    scores = sens.output_sensitivity(params, cfg, tokens, base)
+    act_scores = sens.activation_sensitivity(
+        params, cfg, tokens, base, abits_candidates=sens.SUPPORTED_ABITS
+    )
+
+    bpol, brep = sens.calibrate_policy(
+        params,
+        cfg,
+        base,
+        match_uniform=4,
+        match_uniform_abits=8,
+        abits_candidates=sens.SUPPORTED_ABITS,
+        scores=scores,
+        act_scores=act_scores,
+        prt=args.prt,
+        machine=machine,
+        cost_batch=args.slo_batch,
+    )
+    bcost = cost.evaluate(params, bpol)
+
+    target = args.slo if args.slo else bcost.tokens_per_second
+    slo = planning.Slo(target, batch=args.slo_batch)
+    plan = planning.PlanSpec(mode="auto", weight_bits=4, act_bits=8, prt=args.prt, quant_kv=True)
+    planner = planning.Planner(
+        params,
+        cfg,
+        plan,
+        base=base,
+        cost=cost,
+        tokens=tokens,
+        scores=scores,
+        act_scores=act_scores,
+    )
+    res = planner.solve(slo=slo)
+    scost = res.cost
+
+    def true_err(policy):
+        qtree, _, _ = quantize_params(params, policy)
+        return float(jnp.mean((fwd(qtree) - ref) ** 2))
+
+    b_err, s_err = true_err(bpol), true_err(res.policy)
+    hdr = f"{'config':<26} {'qbytes':>8} {'output err':>11} {'tok/s (DRAM-aware)':>19}"
+    print(hdr)
+    print(
+        f"{'fixed cycle budget':<26} {bcost.quant_bytes:>8} {b_err:>11.6f} "
+        f"{bcost.tokens_per_second:>19.1f}"
+        + ("  [DRAM-bound]" if bcost.dram_bound else "")
+    )
+    print(
+        f"{'SLO plan @' + format(target, '.1f'):<26} {scost.quant_bytes:>8} "
+        f"{s_err:>11.6f} {scost.tokens_per_second:>19.1f}"
+        + ("  [DRAM-bound]" if scost.dram_bound else "")
+    )
+    print(
+        f"budgets: {res.budgets.cycle_budget:.0f} cycles, "
+        f"{res.budgets.byte_budget} quantized bytes "
+        f"({res.budgets.fixed_bytes} fixed f32 bytes charged)"
+    )
+    hist = dict(Counter(res.report.bits_by_unit.values()))
+    print(f"plan hash: {res.spec.spec_hash}  bits: {hist}")
+    if args.save_plan:
+        res.spec.save(args.save_plan)
+        print(f"wrote solved plan to {args.save_plan}")
+
+    result = {
+        "prt": args.prt,
+        "dram_bw": args.dram_bw,
+        "target_tps": target,
+        "baseline": {
+            "err": b_err,
+            "qbytes": bcost.quant_bytes,
+            "tps": bcost.tokens_per_second,
+            "dram_bound": bcost.dram_bound,
+            "cycles": bcost.cycles,
+        },
+        "slo_plan": {
+            "err": s_err,
+            "qbytes": scost.quant_bytes,
+            "tps": scost.tokens_per_second,
+            "dram_bound": scost.dram_bound,
+            "cycles": scost.cycles,
+            "plan_hash": res.spec.spec_hash,
+            "meets_slo": res.meets_slo,
+        },
+    }
+    if args.check:
+        assert scost.tokens_per_second >= target * (1 - 1e-9), (
+            f"SLO-derived plan misses its own target under the model: "
+            f"{scost.tokens_per_second} < {target}"
+        )
+        assert s_err < b_err, (
+            f"SLO plan failed to beat the fixed-budget baseline at equal "
+            f"modeled throughput: {s_err} vs {b_err}"
+        )
+        print(
+            "CHECK OK: SLO plan meets its target tokens/s under the "
+            f"DRAM-aware model ({scost.tokens_per_second:.1f} >= {target:.1f}) "
+            f"at lower output error than the fixed-budget baseline "
+            f"({s_err:.6f} < {b_err:.6f})"
+        )
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinymistral_248m")
@@ -237,8 +340,34 @@ def main():
         "--prt",
         choices=("paper", "measured"),
         default="measured",
-        help="pattern-discount model for projected cycles in --activations mode",
+        help="pattern-discount model for projected cycles in --activations/--slo mode",
     )
+    ap.add_argument(
+        "--slo",
+        nargs="?",
+        type=float,
+        const=0.0,
+        default=None,
+        help="SLO-driven planning vs the fixed-cycle-budget baseline under the "
+        "DRAM-aware cost model; optional value = target tokens/s (default: "
+        "whatever the fixed-budget baseline actually achieves, i.e. equal "
+        "modeled throughput).  With --check: assert the plan meets the target "
+        "at lower output error than the baseline",
+    )
+    ap.add_argument(
+        "--slo-batch",
+        type=int,
+        default=8,
+        help="batch the SLO is quoted at (decode slots)",
+    )
+    ap.add_argument(
+        "--dram-bw",
+        type=float,
+        default=2e9,
+        help="machine DRAM bandwidth for --slo mode (default scaled down so the "
+        "tiny proxy model is byte-bound the way a 7B model is on real hardware)",
+    )
+    ap.add_argument("--save-plan", default=None, help="write the solved SLO plan JSON here")
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch)
@@ -250,6 +379,14 @@ def main():
     fwd = jax.jit(lambda p: lm.forward(p, tokens, cfg)[0])
     ref = fwd(params)
     base = QuantPolicy(bits=4, group_size=args.group_size, min_size=1024)
+
+    if args.slo is not None:
+        result = run_slo(args, cfg, params, tokens, fwd, ref, base)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(result, f, indent=2)
+            print(f"wrote {args.json}")
+        return
 
     if args.activations:
         result = run_activations(args, cfg, params, tokens, fwd, ref, base)

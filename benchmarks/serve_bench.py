@@ -13,6 +13,7 @@ Run:  PYTHONPATH=src python benchmarks/serve_bench.py --requests 12 \
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -67,6 +68,12 @@ def main():
                     help="iterations between request arrivals")
     ap.add_argument("--prefill-budget", type=int, default=64)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--plan", default=None,
+                    help="precision plan (grammar string or plan.json "
+                         "path) served in both modes")
+    ap.add_argument("--json", default=None,
+                    help="write per-mode stats (incl. plan provenance: "
+                         "plan_hash/replan_count/prt_hit_rate) here")
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch)
@@ -78,12 +85,25 @@ def main():
           f"(gap {args.arrival_gap} iters, {total_prompt} prompt tokens), "
           f"pool of {args.batch} slots, Q{args.ql} weights, int8 KV")
 
+    plan = None
+    if args.plan is not None:
+        # resolve once: an auto plan re-solved per mode would run the
+        # whole sensitivity calibration twice for the identical answer
+        from repro import planning
+        from repro.models.sail_linear import QuantPolicy
+        plan = planning.plan_from_arg(args.plan)
+        if not plan.solved:
+            plan = planning.resolve_plan(
+                plan, params, cfg,
+                base=QuantPolicy(bits=args.ql, group_size=32,
+                                 min_size=1024)).spec
     results = {}
     for mode in ("batch", "continuous"):
         ecfg = EngineConfig(batch_size=args.batch,
                             cache_len=args.cache_len, quantize=True,
                             ql=args.ql, group_size=32, quant_kv=True,
-                            mode=mode, prefill_budget=args.prefill_budget)
+                            mode=mode, plan=plan,
+                            prefill_budget=args.prefill_budget)
         results[mode] = run_mode(params, cfg, ecfg, workload)
 
     hdr = (f"{'mode':<12} {'iters':>6} {'tok/s':>8} {'mean lat':>9} "
@@ -102,6 +122,11 @@ def main():
           f"{b['iterations']}/{c['iterations']} = "
           f"{b['iterations']/c['iterations']:.2f}x fewer model iterations, "
           f"{c['tok_per_s']/max(b['tok_per_s'],1e-9):.2f}x tokens/s")
+    print(f"plan: {c['plan_hash']} ({c['plan_mode']})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

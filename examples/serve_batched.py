@@ -28,9 +28,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--bit-policy", default=None,
-                    help="mixed-precision spec, e.g. rules:mlp=3,attn=5 "
-                         "or auto:q4 (see repro.core.sensitivity)")
+    ap.add_argument("--plan", default=None,
+                    help="precision plan, e.g. rules:mlp=3,attn=5 or "
+                         "auto:q4a8,prt=measured, or a plan.json path "
+                         "(see repro.planning)")
     ap.add_argument("--full", action="store_true",
                     help="use the full config instead of smoke (slow)")
     ap.add_argument("--mode", choices=("continuous", "batch"),
@@ -41,11 +42,12 @@ def main():
     key = jax.random.PRNGKey(0)
     params = lm.init_params(key, cfg)
 
+    from repro.planning import plan_from_arg
+    plan = plan_from_arg(args.plan) if args.plan is not None else None
     engine = Engine(params, cfg, EngineConfig(
         batch_size=args.batch, cache_len=256, quantize=True, ql=args.ql,
-        group_size=32, quant_kv=True, mode=args.mode,
-        bit_policy=args.bit_policy))
-    wdesc = (f"mixed ({args.bit_policy})"
+        group_size=32, quant_kv=True, mode=args.mode, plan=plan))
+    wdesc = (f"mixed ({args.plan})"
              if engine.stats()["mixed_precision"] else f"Q{args.ql}")
     print(f"serving {cfg.name}: weights {wdesc}, "
           f"compression {engine.compression:.2f}x, int8 KV cache")

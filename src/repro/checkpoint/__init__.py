@@ -1,4 +1,5 @@
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, keep_last,
                                          latest_step, quantized_template,
-                                         restore, restore_quantized, save,
+                                         restore, restore_quantized,
+                                         restored_plan, save,
                                          save_quantized)

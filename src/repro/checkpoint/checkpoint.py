@@ -137,7 +137,8 @@ def restore(directory: str, template, step: Optional[int] = None,
 
 
 def save_quantized(directory: str, step: int, qtree, policy,
-                   extras: Optional[Dict] = None) -> str:
+                   extras: Optional[Dict] = None, plan=None,
+                   quant_kv: bool = True) -> str:
     """Save a SAIL-quantized (possibly mixed-precision) parameter tree.
 
     The ``QuantPolicy`` spec — including a sensitivity-calibrated
@@ -145,9 +146,25 @@ def save_quantized(directory: str, step: int, qtree, policy,
     activation precisions (``act_per_path``/``act_bits``) — rides along
     in the manifest extras, so ``restore_quantized`` can rebuild the
     exact mixed tree structure (QTensor statics incl. ``abits``, blocks
-    segmentation) from nothing but the raw model's parameter template."""
+    segmentation) from nothing but the raw model's parameter template.
+
+    The manifest also carries the serving ``plan`` (a
+    ``repro.planning.PlanSpec`` — derived from the policy when not given
+    explicitly; pass the engine's ``eng.plan``, or at least ``quant_kv``,
+    so KV provenance is recorded faithfully), so a restored deployment
+    keeps its plan provenance (hash, SLO target, PRT mode) and can be
+    re-planned without re-deriving what it was serving;
+    ``restored_plan`` reads it back."""
+    from repro.planning import PlanSpec
     extras = dict(extras or {})
     extras["quant_policy"] = policy.to_spec()
+    if plan is None:
+        try:
+            plan = PlanSpec.from_policy(policy, quant_kv=quant_kv)
+        except ValueError:
+            plan = None    # exotic policies (explicit codebook arrays)
+    if plan is not None:
+        extras["plan"] = plan.to_json()
     return save(directory, step, qtree, extras)
 
 
@@ -181,6 +198,15 @@ def restore_quantized(directory: str, raw_template,
     policy = QuantPolicy.from_spec(spec)
     template = quantized_template(raw_template, policy)
     return restore(directory, template, step)
+
+
+def restored_plan(extras: Dict):
+    """The serving ``PlanSpec`` a quantized checkpoint was written under
+    (from ``restore_quantized``'s extras), or None for pre-plan
+    checkpoints."""
+    from repro.planning import PlanSpec
+    spec = extras.get("plan")
+    return PlanSpec.from_json(spec) if spec is not None else None
 
 
 def keep_last(directory: str, n: int = 3) -> None:

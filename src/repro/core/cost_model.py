@@ -272,7 +272,10 @@ def mixed_decode_cycles(units, machine: SailMachine = SailMachine(),
     """
     if prt == "measured":
         from repro.core import pattern
-        calib = pattern.canonical_calib(calib)
+        # per-layer calib mappings collapse to their global fallback here:
+        # these units carry no layer identity (the planning facade prices
+        # per-layer; see repro.planning.cost.DecodeCostModel)
+        calib = pattern.calib_for_layer(pattern.canonical_calib(calib), None)
     total = 0.0
     for u in units:
         k, n, wbits = u[0], u[1], u[2]

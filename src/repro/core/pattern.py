@@ -163,7 +163,7 @@ def synthetic_activations(k: int, batch: int = 8,
     return got
 
 
-def canonical_calib(calib) -> "np.ndarray | None":
+def canonical_calib(calib) -> "np.ndarray | dict | None":
     """Normalize a calibration batch to ONE f32 ndarray object.
 
     Callers that loop over precisions (the joint allocator's cost
@@ -171,10 +171,24 @@ def canonical_calib(calib) -> "np.ndarray | None":
     once at their boundary: passing a JAX array or non-f32 ndarray
     straight through would re-materialize (and re-fingerprint) the batch
     on every discount lookup, defeating the identity-keyed memoization
-    below."""
+    below.  A per-layer mapping ``{layer: batch}`` (see
+    ``repro.planning.tap.ActivationTap.calib``) canonicalizes each
+    value; resolve one layer's batch with :func:`calib_for_layer`."""
     if calib is None:
         return None
+    if isinstance(calib, dict):
+        return {k: np.asarray(v, dtype=np.float32) for k, v in calib.items()}
     return np.asarray(calib, dtype=np.float32)
+
+
+def calib_for_layer(calib, layer):
+    """Per-layer calibration mapping -> one batch: the layer's own
+    captured activations when present, else the ``None``-keyed global
+    fallback.  Plain arrays (and None) pass through."""
+    if isinstance(calib, dict):
+        got = calib.get(layer)
+        return got if got is not None else calib.get(None)
+    return calib
 
 
 def _batch_key(arr: np.ndarray):

@@ -26,12 +26,12 @@ serving feature:
     ``abits_candidates`` it allocates ``(wbits, abits)`` JOINTLY under a
     projected-cycles budget (``allocate_bits_joint``), accepts held-out
     ``calib_batches``, and caps scan segmentation via ``max_segments``.
-  * ``parse_bit_policy`` / ``resolve_bit_policy`` — the serving-facing
-    spec surface (``EngineConfig.bit_policy``, ``--bit-policy``):
-    ``"uniform:<b>[a<ab>]"``, ``"rules:<regex>=<b>[a<ab>],..."``,
-    ``"auto:q<b>"`` (byte budget matched to uniform b-bit),
-    ``"auto:<f>bpw"``, ``"auto:q<b>a<ab>[,prt=measured][,maxseg=<n>]"``
-    (joint mode at the uniform (b, ab) cycle budget).
+  * ``parse_bit_policy`` / ``resolve_bit_policy`` — DEPRECATED shims
+    over ``repro.planning``: the serving-facing surface is now a typed
+    ``PlanSpec`` (``EngineConfig.plan``, ``--plan``), and the legacy
+    string grammar (``"uniform:<b>[a<ab>]"``, ``"rules:..."``,
+    ``"auto:q<b>[a<ab>][,prt=...][,maxseg=<n>][,slo=<tps>]"``,
+    ``"auto:<f>bpw"``) enters only via ``PlanSpec.parse``.
 """
 from __future__ import annotations
 
@@ -438,6 +438,35 @@ def allocate_bits(units: Sequence[Unit], budget_bytes: int,
                             predicted_error=predicted, feasible=True)
 
 
+def pareto_state_filter(states, err_of, cyc_of, byte_of=None):
+    """Drop states strictly dominated in (error, cycles[, bytes]).
+
+    A state another state beats-or-ties on every objective (and beats on
+    at least one) can never be part of a better allocation, so the joint
+    solver's climb and swap-refinement loops — O(|units|^2 x |states|^2)
+    per accepted swap — need not consider it.  Real probe ladders
+    saturate (several precisions reach the same error at different
+    cost), so the surviving frontier is typically a fraction of the
+    product grid; see the scaling regression in tests/test_planning.py.
+    """
+    scored = [
+        (s, err_of(s), cyc_of(s), byte_of(s) if byte_of is not None else 0)
+        for s in states
+    ]
+    kept = []
+    for s, e, c, b in scored:
+        dominated = False
+        for t, e2, c2, b2 in scored:
+            if t == s:
+                continue
+            if e2 <= e and c2 <= c and b2 <= b and (e2 < e or c2 < c or b2 < b):
+                dominated = True
+                break
+        if not dominated:
+            kept.append(s)
+    return kept
+
+
 def allocate_bits_joint(units: Sequence[Unit], cycle_budget: float,
                         group_size: int,
                         byte_budget: Optional[int] = None,
@@ -446,7 +475,8 @@ def allocate_bits_joint(units: Sequence[Unit], cycle_budget: float,
                         pinned: Optional[Mapping[UnitKey, int]] = None,
                         pinned_act: Optional[Mapping[UnitKey, int]] = None,
                         batch: int = 8, threads: int = 16,
-                        machine=None, prt="paper", calib=None
+                        machine=None, prt="paper", calib=None,
+                        prune_states: bool = True
                         ) -> JointAllocationReport:
     """Joint (wbits, abits) allocation under a projected-cycles budget.
 
@@ -463,7 +493,13 @@ def allocate_bits_joint(units: Sequence[Unit], cycle_budget: float,
     Same solver shape as :func:`allocate_bits`: multi-start greedy climbs
     (best error reduction per normalized budget use) followed by pairwise
     down/up swap refinement, so tight budgets where a monotone climb
-    cannot move still reach mixed assignments.
+    cannot move still reach mixed assignments.  ``prune_states`` (on by
+    default) restricts every per-unit move list to its (error, cycles[,
+    bytes]) Pareto frontier — dominated states cannot improve any
+    allocation, and dropping them bounds the swap-refinement candidate
+    count at calibration scale (the ROADMAP's joint-solver scaling item).
+    ``calib`` may be a per-layer mapping (``ActivationTap.calib()``):
+    each unit is then priced with its own layer's measured PRT hit rate.
     """
     from repro.core import cost_model as cm
     from repro.core import pattern as _pattern
@@ -483,24 +519,37 @@ def allocate_bits_joint(units: Sequence[Unit], cycle_budget: float,
     bytes_tab: Dict[Tuple[UnitKey, int], int] = {}
     cyc_tab: Dict[Tuple[UnitKey, Tuple[int, int]], float] = {}
     for u in units:
+        ucalib = _pattern.calib_for_layer(calib, u.layer)
         for wb in wcand:
             bytes_tab[(u.key, wb)] = unit_bytes(u.k, u.n, wb, group_size,
                                                 u.copies)
         for s in states:
             wb, ab = s
             _, cyc = cm._best_nbw_and_cycles(u.k, u.n, wb, ab, batch,
-                                             threads, m, prt, calib)
+                                             threads, m, prt, ucalib)
             cyc_tab[(u.key, s)] = u.copies * cyc
 
     def err(u: Unit, s: Tuple[int, int]) -> float:
         return u.errors[s[0]] + u.aerrors[s[1]]
 
+    _states_cache: Dict[UnitKey, list] = {}
+
     def unit_states(u: Unit):
+        got = _states_cache.get(u.key)
+        if got is not None:
+            return got
         wfix = pinned.get(u.key)
         afix = pinned_act.get(u.key)
-        return [(wb, ab) for wb, ab in states
+        opts = [(wb, ab) for wb, ab in states
                 if (wfix is None or wb == wfix)
                 and (afix is None or ab == afix)]
+        if prune_states and len(opts) > 2:
+            opts = pareto_state_filter(
+                opts, lambda s: err(u, s), lambda s: cyc_tab[(u.key, s)],
+                (lambda s: bytes_tab[(u.key, s[0])])
+                if byte_budget is not None else None)
+        _states_cache[u.key] = opts
+        return opts
 
     free = [u for u in units
             if len(unit_states(u)) > 1]
@@ -994,144 +1043,93 @@ def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
 
 
 # ---------------------------------------------------------------------------
-# serving-facing spec surface
+# serving-facing spec surface (deprecated shims over repro.planning)
 # ---------------------------------------------------------------------------
 
-def _parse_bits_token(tok: str) -> Tuple[int, Optional[int]]:
-    """``"4"`` -> (4, None); ``"4a6"`` -> (4, 6) — weight bits plus the
-    optional activation precision the lutmm call serves at."""
-    m = re.fullmatch(r"(\d+)(?:a(\d+))?", tok.strip())
-    if not m:
-        raise ValueError(f"bad bits token {tok!r} (expected <b> or <b>a<ab>)")
-    return int(m.group(1)), (int(m.group(2)) if m.group(2) else None)
+# public alias: the planner emits solved PlanSpecs from solver reports
+spec_map_from_units = _spec_map_from_units
 
 
 def parse_bit_policy(spec: str) -> Dict[str, Any]:
-    """``--bit-policy`` / ``EngineConfig.bit_policy`` string grammar.
+    """DEPRECATED: use ``repro.planning.PlanSpec.parse``.
 
-      uniform:<b>[a<ab>]                  one precision everywhere
-      rules:<regex>=<b>[a<ab>],...        explicit per-path overrides
-      auto:q<b>                           allocate within uniform-b bytes
-      auto:<f>bpw                         allocate within f bits/weight
-      auto:q<b>a<ab>[,<opt>...]           JOINT (wbits, abits) allocation
-                                          within the projected cycles of
-                                          uniform (b, ab)
-
-    ``a<ab>`` anywhere selects the activation precision of the lutmm call
-    (omitted = f32 activations for uniform/rules, joint mode requires
-    it).  Auto options: ``prt=paper|measured`` (pattern-discount model
-    for the cycle budget), ``maxseg=<n>`` (scan-segment cap).
+    Kept as a thin shim for callers of the legacy string grammar
+    (``uniform:<b>[a<ab>]``, ``rules:<regex>=<b>[a<ab>],...``,
+    ``auto:q<b>[a<ab>][,prt=...][,maxseg=...]``, ``auto:<f>bpw``) —
+    parsing now happens in ``PlanSpec.parse`` and this function merely
+    re-emits its legacy dict form.
     """
-    kind, _, rest = spec.partition(":")
-    if kind == "uniform":
-        bits, abits = _parse_bits_token(rest)
-        out: Dict[str, Any] = {"mode": "uniform", "bits": bits}
-        if abits is not None:
-            out["abits"] = abits
-        return out
-    if kind == "rules":
-        rules = []
-        act_rules = []
-        default = None
-        default_act = None
-        for part in filter(None, rest.split(",")):
-            pat, _, b = part.rpartition("=")
-            if not pat:
-                raise ValueError(f"bad rule {part!r} in {spec!r}")
-            bits, abits = _parse_bits_token(b)
-            if pat in ("default", "*"):
-                default, default_act = bits, abits
-            else:
-                rules.append((pat, bits))
-                if abits is not None:
-                    act_rules.append((pat, abits))
-        out = {"mode": "rules", "rules": rules}
-        if act_rules:
-            out["act_rules"] = act_rules
-        if default is not None:
-            out["bits"] = default
-        if default_act is not None:
-            out["abits"] = default_act
-        return out
-    if kind == "auto":
-        parts = [p.strip() for p in rest.split(",") if p.strip()]
-        if not parts:
-            raise ValueError(f"empty auto spec {spec!r}")
-        budget = parts[0]
-        out = {"mode": "auto"}
-        if budget.startswith("q"):
-            bits, abits = _parse_bits_token(budget[1:])
-            out["match_uniform"] = bits
-        elif budget.endswith("bpw"):
-            out["budget_bpw"] = float(budget[:-3])
-            abits = None
-        else:
-            raise ValueError(
-                f"auto budget must be q<b>[a<ab>] or <f>bpw, got {budget!r}")
-        if abits is not None:
-            out["abits"] = abits
-        for opt in parts[1:]:
-            key, _, val = opt.partition("=")
-            if key == "prt":
-                if val not in ("paper", "measured"):
-                    raise ValueError(f"prt must be paper|measured, got "
-                                     f"{val!r}")
-                out["prt"] = val
-            elif key == "maxseg":
-                out["max_segments"] = int(val)
-                if out["max_segments"] < 1:
-                    raise ValueError(f"maxseg must be >= 1, got {val}")
-            elif key == "a":
-                out["abits"] = int(val)
-            else:
-                raise ValueError(f"unknown auto option {opt!r} in {spec!r}")
-        return out
-    raise ValueError(f"unknown bit policy {spec!r} "
-                     "(expected uniform:/rules:/auto:)")
+    import warnings
+
+    from repro.planning import PlanSpec
+    warnings.warn(
+        "parse_bit_policy is deprecated; use repro.planning."
+        "PlanSpec.parse (the dict form it returns is the legacy "
+        "EngineConfig.bit_policy surface)", DeprecationWarning,
+        stacklevel=2)
+    return PlanSpec.parse(spec).to_legacy_dict()
 
 
 def resolve_bit_policy(bit_policy, params, cfg, base):
-    """EngineConfig.bit_policy (None | str | dict | QuantPolicy) -> the
+    """DEPRECATED: use ``repro.planning.resolve_plan``.
+
+    EngineConfig.bit_policy (None | str | dict | QuantPolicy) -> the
     QuantPolicy to quantize with.  ``base`` carries the engine's
-    group_size/min_size/default bits; auto mode runs the calibration."""
+    group_size/min_size/default bits; auto mode runs the calibration.
+    Strings and legacy mode-dicts route through ``PlanSpec``; explicit
+    QuantPolicy objects and raw ``QuantPolicy.from_spec`` dicts resolve
+    as before.
+    """
+    import warnings
+
+    warnings.warn(
+        "resolve_bit_policy is deprecated; use repro.planning."
+        "resolve_plan (EngineConfig.plan)", DeprecationWarning,
+        stacklevel=2)
+    return _resolve_policy_like(bit_policy, params, cfg, base)
+
+
+def _resolve_policy_like(bit_policy, params, cfg, base):
+    """Shared resolution for the legacy ``bit_policy`` surface (no
+    deprecation warning — ``Engine`` calls this for compat configs after
+    warning once itself)."""
+    from repro import planning
     from repro.models.sail_linear import QuantPolicy
     if bit_policy is None:
         return base
     if isinstance(bit_policy, QuantPolicy):
         return bit_policy
     if isinstance(bit_policy, str):
-        bit_policy = parse_bit_policy(bit_policy)
+        return planning.resolve_plan(
+            planning.PlanSpec.parse(bit_policy), params, cfg,
+            base=base).policy
     if not isinstance(bit_policy, Mapping):
         raise TypeError(f"bit_policy must be None/str/dict/QuantPolicy, "
                         f"got {type(bit_policy)!r}")
-    spec = dict(bit_policy)
-    mode = spec.pop("mode", "spec")
-    if mode == "uniform":
-        abits = spec.get("abits")
-        return dataclasses.replace(
-            base, bits=int(spec["bits"]),
-            act_bits=int(abits) if abits is not None else base.act_bits)
-    if mode == "rules":
-        abits = spec.get("abits")
-        return dataclasses.replace(
-            base, bits=int(spec.get("bits", base.bits)),
-            rules=tuple((p, int(b)) for p, b in spec.get("rules", ())),
-            act_rules=tuple((p, int(b))
-                            for p, b in spec.get("act_rules", ())),
-            act_bits=int(abits) if abits is not None else base.act_bits)
-    if mode == "auto":
-        abits = spec.pop("abits", None)
-        if abits is not None:
-            # joint (wbits, abits) calibration: the cycle budget is the
-            # projected decode cost of serving uniform (b, abits)
-            spec.setdefault("abits_candidates", SUPPORTED_ABITS)
-            spec.setdefault("match_uniform_abits", int(abits))
-        policy, _ = calibrate_policy(params, cfg, base, **spec)
-        return policy
+    mode = bit_policy.get("mode", "spec")
+    if mode in ("uniform", "rules", "auto"):
+        try:
+            plan = planning.PlanSpec.from_legacy_dict(bit_policy)
+        except ValueError:
+            if mode != "auto":
+                raise
+            # full backward compat: auto dicts could carry arbitrary
+            # calibrate_policy kwargs (calib_batch, budget_bytes, ...)
+            # that have no PlanSpec field — forward them like the old
+            # resolve_bit_policy did
+            spec = dict(bit_policy)
+            spec.pop("mode")
+            abits = spec.pop("abits", None)
+            if abits is not None:
+                spec.setdefault("abits_candidates", SUPPORTED_ABITS)
+                spec.setdefault("match_uniform_abits", int(abits))
+            policy, _ = calibrate_policy(params, cfg, base, **spec)
+            return policy
+        return planning.resolve_plan(plan, params, cfg, base=base).policy
     if mode == "spec":
-        merged = QuantPolicy.from_spec({
+        spec = {k: v for k, v in bit_policy.items() if k != "mode"}
+        return QuantPolicy.from_spec({
             "bits": base.bits, "group_size": base.group_size,
             "min_size": base.min_size, "skip_embed": base.skip_embed,
             **spec})
-        return merged
     raise ValueError(f"unknown bit_policy mode {mode!r}")

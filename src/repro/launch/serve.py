@@ -8,6 +8,18 @@ continuous batching over a fixed pool of ``--batch`` KV-cache slots (one
 model iteration serves every active user — the paper's tensor-level
 scheduling).  ``--mode batch`` selects the old run-to-completion loop
 for A/B comparison.
+
+Precision planning (``repro.planning``):
+
+    # serve a plan: grammar string or solved plan.json
+    ... --plan "auto:q4a8,prt=measured,maxseg=4" --save-plan plan.json
+    ... --plan plan.json          # reuse: no recalibration at startup
+
+    # SLO-driven: derive the cycle+DRAM budgets from a target tokens/s
+    ... --slo 80 --tap 512        # tap live traffic for later replans
+
+``--bit-policy`` remains as a deprecated alias routed through
+``PlanSpec.parse``.
 """
 from __future__ import annotations
 
@@ -28,14 +40,28 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=512)
     ap.add_argument("--no-quant-kv", action="store_true")
+    ap.add_argument("--plan", default=None,
+                    help="precision plan: a grammar string "
+                         "(uniform:<b>[a<ab>] | rules:<regex>=<b>[a<ab>],"
+                         "... | auto:q<b>[a<ab>][,prt=...][,maxseg=<n>]"
+                         "[,slo=<tps>] | auto:<f>bpw) or a path to a "
+                         "plan.json written by --save-plan (solved plans "
+                         "serve without recalibration)")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="target decode tokens/s at --batch: auto plans "
+                         "derive their cycle AND DRAM-byte budgets from "
+                         "this instead of a fixed constant (implies "
+                         "auto:q<ql>a8,prt=measured when --plan is "
+                         "omitted)")
+    ap.add_argument("--save-plan", default=None,
+                    help="write the engine's (solved) plan JSON here")
+    ap.add_argument("--tap", type=int, default=0, metavar="ROWS",
+                    help="capture per-layer decode activations into an "
+                         "ActivationTap of this capacity (enables online "
+                         "PRT recalibration via Engine.replan)")
     ap.add_argument("--bit-policy", default=None,
-                    help="mixed-precision spec: uniform:<b>[a<ab>] | "
-                         "rules:<regex>=<b>[a<ab>],... | auto:q<b> | "
-                         "auto:<f>bpw | auto:q<b>a<ab>[,prt=measured]"
-                         "[,maxseg=<n>] — a<ab> sets the lutmm activation "
-                         "precision; auto:q<b>a<ab> jointly allocates "
-                         "(wbits, abits) per layer within the projected "
-                         "cycles of uniform (b, ab)")
+                    help="DEPRECATED alias for --plan (grammar strings "
+                         "only)")
     ap.add_argument("--mode", choices=("continuous", "batch"),
                     default="continuous")
     ap.add_argument("--prefill-budget", type=int, default=None,
@@ -46,24 +72,32 @@ def main() -> None:
 
     import repro.configs as C
     from repro.models import lm
+    from repro.planning import plan_from_arg
     from repro.serving.engine import Engine, EngineConfig
 
     cfg = C.get_smoke(args.arch) if args.smoke else C.get_config(args.arch)
     if cfg.family == "encdec":
         raise SystemExit("use a decoder-only arch for the LM server")
+    plan = plan_from_arg(args.plan) if args.plan is not None else None
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     eng = Engine(params, cfg, EngineConfig(
         batch_size=args.batch, cache_len=args.cache_len, quantize=True,
         ql=args.ql, group_size=min(128, cfg.d_model),
         quant_kv=not args.no_quant_kv, mode=args.mode,
+        plan=plan, slo=args.slo, tap_capacity=args.tap,
         bit_policy=args.bit_policy,
         prefill_budget=args.prefill_budget))
-    quant_desc = (f"mixed-precision ({args.bit_policy})"
-                  if eng.stats()["mixed_precision"] else f"Q{args.ql}")
+    st = eng.stats()
+    quant_desc = (f"mixed-precision plan {st['plan_hash']}"
+                  if st["mixed_precision"]
+                  else f"Q{args.ql} (plan {st['plan_hash']})")
     print(f"{cfg.name}: {quant_desc} weights "
           f"({eng.compression:.2f}x compression), "
           f"{'int8' if not args.no_quant_kv else 'f32'} KV, "
           f"{args.mode} scheduling")
+    if args.save_plan and eng.plan is not None:
+        eng.plan.save(args.save_plan)
+        print(f"wrote plan {eng.plan.spec_hash} to {args.save_plan}")
 
     on_token = None
     if args.stream:
@@ -86,6 +120,10 @@ def main() -> None:
           f"({st['prefill_iterations']} prefill / "
           f"{st['decode_iterations']} decode, "
           f"{st['prefill_tokens']} prompt tokens)")
+    if args.tap and eng.tap is not None:   # taps attach in continuous mode
+        print(f"tap: {st['tapped_rows']} activation rows captured across "
+              f"{eng.tap.n_layers} layers (Engine.replan() recalibrates "
+              f"measured PRT discounts from them)")
 
 
 if __name__ == "__main__":

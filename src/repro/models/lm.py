@@ -384,10 +384,12 @@ def prefill_into_slot(params, tokens, cache, slot, cfg: ModelConfig,
     return logits, _scatter_slots_jit(cache, fresh, slots)
 
 
-@partial(jax.jit, static_argnames=("cfg", "quant_kv", "moe_mode"))
+@partial(jax.jit, static_argnames=("cfg", "quant_kv", "moe_mode",
+                                   "capture_layer_inputs"))
 def decode_step(params, tokens, cache, cfg: ModelConfig,
                 quant_kv: bool = False, moe_mode: str = "dense",
-                active_mask: Optional[jax.Array] = None):
+                active_mask: Optional[jax.Array] = None,
+                capture_layer_inputs: bool = False):
     """One decode step.  tokens [B, 1] -> (logits [B, V], new cache).
 
     active_mask: optional [B] bool — retired slots keep their cache
@@ -396,6 +398,12 @@ def decode_step(params, tokens, cache, cfg: ModelConfig,
     the matmuls (the weight stream is shared either way) but their
     outputs are dead values the engine ignores until the slot is
     re-prefilled.
+
+    capture_layer_inputs: additionally return each block's input
+    activations as a third result ([n_layers, B, 1, D]) — the vectors
+    the DFM's Pattern Reuse Table would see.  The serving engine feeds
+    them to ``repro.planning.tap.ActivationTap`` so measured PRT
+    discounts can recalibrate on live traffic.
     """
     b = tokens.shape[0]
     position = cache["length"]                   # absolute position of token
@@ -411,16 +419,22 @@ def decode_step(params, tokens, cache, cfg: ModelConfig,
         y, new_cache_l = blk.block_apply_decode(
             p_l, x, cfg, cache_l, position, cache_len,
             moe_mode=moe_mode, quant_kv=quant_kv)
+        if capture_layer_inputs:
+            return y, (new_cache_l, x)
         return y, new_cache_l
 
     segments = block_segments(params)
     new_parts = []
+    captured = []
     offset = 0
     for seg in segments:
         n_seg = _segment_len(seg)
         cache_seg = jax.tree_util.tree_map(
             lambda a: a[offset:offset + n_seg], cache["layers"])
         x, new_seg = jax.lax.scan(body, x, (seg, cache_seg))
+        if capture_layer_inputs:
+            new_seg, xs_seg = new_seg
+            captured.append(xs_seg)
         new_parts.append(new_seg)
         offset += n_seg
     new_layers = _concat_segments(new_parts)
@@ -431,6 +445,8 @@ def decode_step(params, tokens, cache, cfg: ModelConfig,
     else:
         new_length = cache["length"] + active_mask.astype(jnp.int32)
     new_cache = {"length": new_length, "layers": new_layers}
+    if capture_layer_inputs:
+        return logits, new_cache, jnp.concatenate(captured, axis=0)
     return logits, new_cache
 
 

@@ -1,0 +1,101 @@
+"""Precision planning: the single front door for mixed-precision serving.
+
+``PlanSpec`` (the typed plan), ``DecodeCostModel`` (DRAM-aware pricing),
+``Planner`` (offline solve + SLO budgets + online replan), and
+``ActivationTap`` (live-traffic capture).  See ``repro/planning/spec.py``
+for the object model and README "Planning API" for the migration story.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+from repro.planning.cost import (
+    Budgets,
+    DecodeCostModel,
+    PlanCost,
+    Slo,
+    calib_for_layer,
+    policy_units,
+    unquantized_bytes,
+)
+from repro.planning.planner import Planner, PlanResult
+from repro.planning.spec import PlanRule, PlanSpec
+from repro.planning.tap import ActivationTap
+
+__all__ = [
+    "ActivationTap",
+    "Budgets",
+    "DecodeCostModel",
+    "PlanCost",
+    "PlanRule",
+    "PlanResult",
+    "PlanSpec",
+    "Planner",
+    "Slo",
+    "as_plan",
+    "calib_for_layer",
+    "plan_from_arg",
+    "policy_units",
+    "resolve_plan",
+    "unquantized_bytes",
+]
+
+
+def plan_from_arg(value: Any) -> PlanSpec:
+    """CLI plan argument -> PlanSpec: an existing PlanSpec passes
+    through; a string is loaded as a plan file when it exists on disk or
+    ends in .json, else parsed as grammar.  The one sniffing rule every
+    launcher shares."""
+    import os
+
+    if isinstance(value, PlanSpec):
+        return value
+    if isinstance(value, str) and (os.path.exists(value) or value.endswith(".json")):
+        return PlanSpec.load(value)
+    return as_plan(value)
+
+
+def as_plan(obj: Any) -> PlanSpec:
+    """Coerce any accepted plan form to a PlanSpec: an existing PlanSpec,
+    a grammar string (the only place the legacy grammar enters), or a
+    JSON/legacy dict."""
+    if isinstance(obj, PlanSpec):
+        return obj
+    if isinstance(obj, str):
+        return PlanSpec.parse(obj)
+    if isinstance(obj, Mapping):
+        return PlanSpec.from_json(obj)
+    raise TypeError(f"cannot interpret {type(obj).__name__!r} as a PlanSpec")
+
+
+def resolve_plan(
+    plan: Any,
+    params,
+    cfg,
+    base=None,
+    slo: Optional[Slo] = None,
+    cost: Optional[DecodeCostModel] = None,
+    tokens=None,
+    compute_cost: bool = False,
+) -> PlanResult:
+    """Plan -> servable PlanResult.
+
+    Uniform/rules plans and *solved* auto plans (e.g. loaded from a
+    ``plan.json``) resolve directly — no calibration runs.  Unsolved auto
+    plans run a :class:`Planner` (sensitivity probes + joint solve,
+    honoring ``slo``/``plan.target_tps``).  ``compute_cost`` prices the
+    result under the DRAM-aware model (skipped by default: the engine
+    hot path doesn't need it).
+    """
+    plan = as_plan(plan)
+    if plan.solved:
+        planner = Planner(params, cfg, plan, base=base, cost=cost, tokens=tokens)
+        policy = plan.to_policy(planner.base)
+        return PlanResult(
+            spec=plan,
+            policy=policy,
+            cost=planner._price(policy, plan, None, slo) if compute_cost else None,
+        )
+    planner = Planner(params, cfg, plan, base=base, cost=cost, tokens=tokens)
+    return planner.solve(slo=slo)

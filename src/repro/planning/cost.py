@@ -1,0 +1,293 @@
+"""DecodeCostModel: one pricing facade for precision plans.
+
+Consolidates the cost primitives that used to be wired together ad hoc
+(``mixed_decode_cycles`` / ``resolve_prt_discount`` / ``best_nbw_for_unit``)
+and — the DRAM-aware objective from the ROADMAP — folds the weight-stream
+time into the modeled decode iteration:
+
+    t_iter = max(t_dram, t_compute)        (ping-pong overlap, Sec. III-A)
+    t_dram = total_weight_bytes / (dram_bw * dram_efficiency)
+
+so a byte-heavy allocation can no longer hide behind the compute bound.
+Because the iteration time is a max of two linear terms, an SLO (target
+decode tokens/s at a batch) decomposes *exactly* into two linear budgets
+the joint allocator already knows how to enforce:
+
+    T            = batch / target_tps            seconds per iteration
+    cycle_budget = T * freq_hz                   C-SRAM compute budget
+    byte_budget  = T * dram_bw * eff - fixed     weight-stream budget
+
+(``fixed`` is the DRAM traffic of the leaves the policy does not
+quantize — embeddings, norms — which streams every iteration whatever
+the plan says.)  ``Planner.solve(slo=...)`` is just this decomposition
+plus the existing solver.
+
+Per-layer PRT calibration: ``calib`` may be one f32 ``[B, K]`` activation
+batch or a ``{layer: batch}`` mapping (``None`` key = global fallback),
+e.g. from ``repro.planning.tap.ActivationTap.calib()`` — each unit is
+then discounted by its own layer's measured hit rate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+from repro.core import cost_model as cm
+from repro.core.pattern import calib_for_layer
+
+
+@dataclasses.dataclass(frozen=True)
+class Slo:
+    """A decode service-level objective: aggregate tokens/s at a batch."""
+
+    target_tps: float
+    batch: int = 8
+
+    def __post_init__(self):
+        if self.target_tps <= 0:
+            raise ValueError(f"target_tps must be positive, got {self.target_tps}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+
+    @property
+    def seconds_per_iteration(self) -> float:
+        """One masked decode iteration commits ``batch`` tokens, so the
+        SLO bounds its latency at batch/target seconds."""
+        return self.batch / self.target_tps
+
+
+@dataclasses.dataclass(frozen=True)
+class Budgets:
+    """SLO-derived solver budgets (see module docstring for derivation)."""
+
+    seconds: float
+    cycle_budget: float
+    byte_budget: Optional[int]
+    fixed_bytes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    """Modeled cost of one plan/policy on one model."""
+
+    cycles: float
+    quant_bytes: int
+    fixed_bytes: int
+    t_compute: float
+    t_dram: float
+    seconds_per_iteration: float
+    tokens_per_second: float
+
+    @property
+    def total_bytes(self) -> int:
+        return self.quant_bytes + self.fixed_bytes
+
+    @property
+    def dram_bound(self) -> bool:
+        return self.t_dram > self.t_compute
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeCostModel:
+    """Prices (cycles, bytes, seconds, tokens/s) of precision plans.
+
+    ``prt`` selects the pattern-discount model (False/"off", True/"paper",
+    "measured"); ``nbw`` is a fixed NBW or "auto" (per-unit cycle-optimal);
+    ``include_dram=False`` reverts to the legacy compute-only objective
+    (the pre-PlanSpec behavior, kept for A/B in the bench).
+    """
+
+    machine: cm.SailMachine = dataclasses.field(default_factory=cm.SailMachine)
+    batch: int = 8
+    threads: int = 16
+    prt: Any = "paper"
+    nbw: Any = "auto"
+    include_dram: bool = True
+    calib: Any = None
+
+    def __post_init__(self):
+        from repro.core import pattern
+
+        object.__setattr__(self, "calib", pattern.canonical_calib(self.calib))
+
+    # -- per-unit pricing -------------------------------------------------
+
+    def discount(self, nbw: int, wbits: int, abits: int, layer=None) -> float:
+        """Lookup-cycle discount for one (nbw, wbits, abits) point, using
+        the layer's own calibration batch when one was captured."""
+        return cm.resolve_prt_discount(
+            self.prt, nbw, wbits, abits, calib_for_layer(self.calib, layer), self.machine
+        )
+
+    def unit_cycles(self, k, n, wbits, abits, copies: int = 1, layer=None) -> float:
+        """C-SRAM cycles of one [K, N] matrix at its allocated precision
+        (f32 activations — abits None — are priced at the 8-bit default,
+        matching ``mixed_decode_cycles``)."""
+        ab = 8 if abits is None else int(abits)
+        calib = calib_for_layer(self.calib, layer)
+        if self.nbw == "auto":
+            _, cyc = cm._best_nbw_and_cycles(
+                k, n, wbits, ab, self.batch, self.threads, self.machine, self.prt, calib
+            )
+        else:
+            disc = cm.resolve_prt_discount(self.prt, self.nbw, wbits, ab, calib, self.machine)
+            cyc = cm.lut_gemv_cycles(
+                self.machine, self.batch, k, n, self.nbw, wbits, ab, self.threads, disc
+            )
+        return copies * cyc
+
+    def best_nbw(self, k, n, wbits, abits, layer=None) -> int:
+        ab = 8 if abits is None else int(abits)
+        return cm._best_nbw_and_cycles(
+            k,
+            n,
+            wbits,
+            ab,
+            self.batch,
+            self.threads,
+            self.machine,
+            self.prt,
+            calib_for_layer(self.calib, layer),
+        )[0]
+
+    # -- whole-plan pricing -----------------------------------------------
+
+    def cycles(self, units) -> float:
+        """Projected C-SRAM cycles of one decode iteration.
+
+        ``units``: (k, n, wbits, abits, copies[, layer]) tuples — the
+        output of :func:`policy_units`.
+        """
+        total = 0.0
+        for u in units:
+            k, n, wb, ab, copies = u[0], u[1], u[2], u[3], u[4]
+            layer = u[5] if len(u) > 5 else None
+            total += self.unit_cycles(k, n, wb, ab, copies, layer)
+        return total
+
+    def qbytes(self, units, group_size: int) -> int:
+        """QTensor bytes of the allocation (packed words + scales)."""
+        return sum(cm.qtensor_bytes(u[0], u[1], u[2], group_size, u[4]) for u in units)
+
+    def t_compute(self, cycles: float) -> float:
+        return cycles / self.machine.freq_hz
+
+    def t_dram(self, total_bytes: float) -> float:
+        if not self.include_dram:
+            return 0.0
+        return total_bytes / (self.machine.dram_bw * self.machine.dram_efficiency)
+
+    def iteration_seconds(self, cycles: float, total_bytes: float) -> float:
+        """Ping-pong LLC overlap: the weight stream hides behind compute
+        (or vice versa), so one iteration costs the max of the two."""
+        return max(self.t_compute(cycles), self.t_dram(total_bytes))
+
+    def tokens_per_second(self, cycles: float, total_bytes: float, batch=None) -> float:
+        b = self.batch if batch is None else batch
+        return b / max(self.iteration_seconds(cycles, total_bytes), 1e-30)
+
+    def budgets(self, slo: Slo, fixed_bytes: int = 0) -> Budgets:
+        """Decompose an SLO into the joint solver's two linear budgets."""
+        t = slo.seconds_per_iteration
+        cycle_budget = t * self.machine.freq_hz
+        byte_budget = None
+        if self.include_dram:
+            byte_budget = int(t * self.machine.dram_bw * self.machine.dram_efficiency) - int(
+                fixed_bytes
+            )
+            if byte_budget < 0:
+                raise ValueError(
+                    f"SLO {slo.target_tps} tok/s @ batch {slo.batch} is unreachable: "
+                    f"streaming the {fixed_bytes} unquantized bytes alone exceeds the "
+                    f"{t:.2e}s iteration budget"
+                )
+        return Budgets(
+            seconds=t,
+            cycle_budget=cycle_budget,
+            byte_budget=byte_budget,
+            fixed_bytes=int(fixed_bytes),
+        )
+
+    def evaluate(self, params, policy, batch=None) -> PlanCost:
+        """Price a resolved policy on a concrete parameter tree.
+
+        ``batch`` overrides the model's batch for the WHOLE evaluation —
+        lookup cycles scale with it, not just the tokens-per-iteration
+        numerator — so pricing at an SLO's batch is one consistent
+        re-evaluation, never a mixed-batch ratio."""
+        if batch is not None and batch != self.batch:
+            return dataclasses.replace(self, batch=int(batch)).evaluate(params, policy)
+        units = policy_units(params, policy)
+        cycles = self.cycles(units)
+        qbytes = self.qbytes(units, policy.group_size)
+        fixed = unquantized_bytes(params, policy) if self.include_dram else 0
+        total = qbytes + fixed
+        tc, td = self.t_compute(cycles), self.t_dram(total)
+        secs = max(tc, td)
+        b = self.batch if batch is None else batch
+        return PlanCost(
+            cycles=cycles,
+            quant_bytes=qbytes,
+            fixed_bytes=fixed,
+            t_compute=tc,
+            t_dram=td,
+            seconds_per_iteration=secs,
+            tokens_per_second=b / max(secs, 1e-30),
+        )
+
+
+def policy_units(params, policy) -> List[Tuple[int, int, int, Optional[int], int, Optional[int]]]:
+    """Cost-model units of every leaf ``policy`` quantizes:
+    (k, n, wbits, abits, copies, layer) — per-layer entries for scan
+    stacks whose assignment varies by layer, one aggregated entry
+    otherwise.  This is the single source the engine, planner, and
+    benchmarks price plans with."""
+    from repro.core import sensitivity as sens
+
+    def at(spec, i):
+        if spec is None or not isinstance(spec, (tuple, list)):
+            return spec
+        return spec[i]
+
+    units: List[Tuple[int, int, int, Optional[int], int, Optional[int]]] = []
+    for pstr, w, stacked in sens.quantizable_units(params, policy):
+        k, n = int(w.shape[-2]), int(w.shape[-1])
+        spec = policy.bits_for(pstr)
+        aspec = policy.abits_for(pstr)
+        if stacked:
+            per_slice = 1
+            for d in w.shape[1:-2]:
+                per_slice *= int(d)
+            layers = int(w.shape[0])
+            layered = isinstance(spec, (tuple, list)) or isinstance(aspec, (tuple, list))
+            if layered:
+                for i in range(layers):
+                    units.append((k, n, int(at(spec, i)), _opt(at(aspec, i)), per_slice, i))
+            else:
+                units.append((k, n, int(spec), _opt(aspec), per_slice * layers, None))
+        else:
+            units.append((k, n, int(spec), _opt(aspec), 1, None))
+    return units
+
+
+def _opt(ab):
+    return None if ab is None else int(ab)
+
+
+def unquantized_bytes(params, policy) -> int:
+    """DRAM bytes of the leaves ``policy`` leaves in f32 (embeddings,
+    norms, small tensors).  They stream every decode iteration no matter
+    what the plan allocates, so the DRAM-aware objective charges them as
+    a fixed term."""
+    import jax
+
+    from repro.core import sensitivity as sens
+
+    quantized = {p for p, _, _ in sens.quantizable_units(params, policy)}
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        pstr = jax.tree_util.keystr(path)
+        if pstr not in quantized:
+            total += int(leaf.size) * leaf.dtype.itemsize
+    return total

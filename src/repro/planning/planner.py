@@ -1,0 +1,274 @@
+"""Planner: solve, price, and re-solve PlanSpecs.
+
+``Planner.solve`` turns an *auto* ``PlanSpec`` into a solved one.  With
+an :class:`~repro.planning.cost.Slo` it derives the joint solver's cycle
+AND byte budgets from the target decode tokens/s (cycle-budget
+autoscaling + the DRAM-aware objective — two ROADMAP items); without one
+it reproduces the legacy match-uniform / bits-per-weight budgets.
+
+``Planner.replan`` consumes the per-layer activation batches an
+:class:`~repro.planning.tap.ActivationTap` captured inside
+``Engine.step()`` and recomputes the measured PRT discounts (and, with
+``resolve=True``, the whole allocation) from live traffic — the engine
+then swaps onto the result via ``Engine.apply_plan`` without dropping a
+request.
+
+Sensitivity probes are cached on the planner: the expensive forward
+probes run once, and every subsequent ``solve``/``replan`` (budget
+sweeps, SLO changes, online recalibration) reuses them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.core import pattern
+from repro.core import sensitivity as sens
+from repro.planning.cost import DecodeCostModel, PlanCost, Slo, unquantized_bytes
+from repro.planning.spec import PlanSpec
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """One solved plan: the spec (source of truth), the servable policy,
+    solver diagnostics, and the modeled cost under the DRAM-aware
+    objective."""
+
+    spec: PlanSpec
+    policy: Any
+    report: Any = None
+    cost: Optional[PlanCost] = None
+    budgets: Any = None
+    measured_prt_hit_rate: Optional[float] = None
+
+    @property
+    def meets_slo(self) -> Optional[bool]:
+        if self.spec.target_tps is None or self.cost is None:
+            return None
+        return self.cost.tokens_per_second >= self.spec.target_tps * (1 - 1e-9)
+
+
+def _solver_prt(prt: str):
+    """PlanSpec prt mode -> the cost model's switch values."""
+    return False if prt == "off" else prt
+
+
+class Planner:
+    """Solves one model's precision plans against one cost model."""
+
+    def __init__(
+        self,
+        params,
+        cfg,
+        plan: PlanSpec | str | None = None,
+        base=None,
+        cost: Optional[DecodeCostModel] = None,
+        tokens=None,
+        scores=None,
+        act_scores=None,
+    ):
+        from repro.models.sail_linear import QuantPolicy
+
+        self.params = params
+        self.cfg = cfg
+        if isinstance(plan, str):
+            plan = PlanSpec.parse(plan)
+        self.plan = plan if plan is not None else PlanSpec(mode="auto", act_bits=8)
+        self.base = base or QuantPolicy(
+            bits=self.plan.weight_bits or 4,
+            group_size=self.plan.group_size or 128,
+            min_size=self.plan.min_size or 65536,
+        )
+        self.cost = cost or DecodeCostModel(prt=_solver_prt(self.plan.prt))
+        self._tokens = tokens
+        self._scores = scores
+        self._act_scores = act_scores
+        self._fixed_bytes: Optional[int] = None
+        self.last: Optional[PlanResult] = None
+
+    # -- probe caching ----------------------------------------------------
+
+    def _ensure_scores(self, joint: bool) -> None:
+        if self._tokens is None:
+            self._tokens = sens.calibration_tokens(self.cfg.vocab)
+        if self._scores is None:
+            self._scores = sens.output_sensitivity(self.params, self.cfg, self._tokens, self.base)
+        if joint and self._act_scores is None:
+            self._act_scores = sens.activation_sensitivity(
+                self.params, self.cfg, self._tokens, self.base
+            )
+
+    def fixed_bytes(self) -> int:
+        """DRAM bytes of the leaves the plan cannot allocate (cached)."""
+        if self._fixed_bytes is None:
+            self._fixed_bytes = unquantized_bytes(self.params, self.base)
+        return self._fixed_bytes
+
+    def budgets(self, slo: Slo):
+        """SLO -> (seconds, cycle budget, byte budget); monotone in the
+        target: a higher tokens/s target can only shrink both budgets."""
+        return dataclasses.replace(self.cost, batch=slo.batch).budgets(slo, self.fixed_bytes())
+
+    # -- solving ----------------------------------------------------------
+
+    def solve(
+        self, slo: Optional[Slo] = None, calib=None, plan: Optional[PlanSpec] = None
+    ) -> PlanResult:
+        """Solve the plan (optionally under an SLO) and price the result.
+
+        ``calib``: measured activation batches for ``prt="measured"``
+        pricing — one f32 [B, K] array or an ``ActivationTap.calib()``
+        per-layer mapping; defaults to the cost model's batch.
+        """
+        plan = plan or self.plan
+        if plan.mode != "auto":
+            policy = plan.to_policy(self.base)
+            result = PlanResult(
+                spec=plan, policy=policy, cost=self._price(policy, plan, calib, slo)
+            )
+            self.last = result
+            return result
+        if slo is None and plan.target_tps is not None:
+            slo = Slo(plan.target_tps, plan.slo_batch or self.cost.batch)
+        joint = plan.act_bits is not None
+        self._ensure_scores(joint)
+        calib = calib if calib is not None else self.cost.calib
+        kwargs: dict = {
+            "scores": self._scores,
+            "tokens": self._tokens,
+            "max_segments": plan.max_segments,
+            "machine": self.cost.machine,
+            "cost_batch": slo.batch if slo is not None else self.cost.batch,
+            "cost_threads": self.cost.threads,
+        }
+        if joint:
+            kwargs.update(
+                act_scores=self._act_scores,
+                abits_candidates=sens.SUPPORTED_ABITS,
+                match_uniform_abits=int(plan.act_bits),
+                prt=_solver_prt(plan.prt),
+                prt_calib=calib,
+            )
+        budgets = None
+        if slo is not None:
+            if not joint and not self.cost.include_dram:
+                raise ValueError(
+                    "a weight-only SLO solve needs the DRAM term: without it the "
+                    "SLO only constrains cycles, which weight-only allocation "
+                    "does not budget (add act bits for a joint solve, or enable "
+                    "include_dram)"
+                )
+            budgets = self.budgets(slo)
+            if joint:
+                kwargs["cycle_budget"] = budgets.cycle_budget
+            if budgets.byte_budget is not None:
+                kwargs["budget_bytes"] = budgets.byte_budget
+        elif plan.budget_bpw is not None:
+            kwargs["budget_bpw"] = plan.budget_bpw
+        else:
+            kwargs["match_uniform"] = int(plan.weight_bits)
+        policy, report = sens.calibrate_policy(self.params, self.cfg, self.base, **kwargs)
+        solved = self._solved_spec(plan, report, slo)
+        result = PlanResult(
+            spec=solved,
+            policy=policy,
+            report=report,
+            cost=self._price(policy, plan, calib, slo),
+            budgets=budgets,
+        )
+        self.last = result
+        return result
+
+    def _solved_spec(self, plan: PlanSpec, report, slo: Optional[Slo]) -> PlanSpec:
+        assign = report.bits_by_unit
+        joint = any(isinstance(s, (tuple, list)) for s in assign.values())
+        if joint:
+            weights = sens.spec_map_from_units({k: s[0] for k, s in assign.items()})
+            acts = sens.spec_map_from_units({k: s[1] for k, s in assign.items()})
+        else:
+            weights, acts = sens.spec_map_from_units(assign), None
+        return dataclasses.replace(
+            plan,
+            weights_per_unit=weights,
+            acts_per_unit=acts,
+            target_tps=slo.target_tps if slo is not None else plan.target_tps,
+            slo_batch=slo.batch if slo is not None else plan.slo_batch,
+            group_size=self.base.group_size,
+            min_size=self.base.min_size,
+        )
+
+    def _price(self, policy, plan: PlanSpec, calib, slo: Optional[Slo]) -> PlanCost:
+        # price at the SLO's batch when one is in play: lookup cycles
+        # scale with batch, so budgets and the evaluation must agree
+        cost = dataclasses.replace(
+            self.cost,
+            prt=_solver_prt(plan.prt),
+            calib=calib if calib is not None else self.cost.calib,
+            nbw=plan.nbw,
+            batch=slo.batch if slo is not None else self.cost.batch,
+        )
+        return cost.evaluate(self.params, policy)
+
+    def _traffic_hit_rate(self, plan: PlanSpec, calib) -> float:
+        """PRT hit rate of the captured traffic at the plan's operating
+        point: the plan's NBW when fixed, else the cycle-optimal NBW for
+        the traffic's own feature width at the plan's anchor precisions;
+        per-layer batches average their per-layer rates (the headline
+        number ``Engine.stats()['prt_hit_rate']`` tracks — the solver
+        itself prices each unit's own layer separately)."""
+        abits = plan.act_bits if plan.act_bits is not None else 8
+        wbits = plan.weight_bits if plan.weight_bits is not None else 4
+        batches = (
+            [v for k, v in sorted(calib.items(), key=lambda kv: (kv[0] is None, kv[0]))
+             if k is not None] or [calib[None]]
+            if isinstance(calib, dict)
+            else [calib]
+        )
+        rates = []
+        for batch in batches:
+            nbw = plan.nbw
+            if not isinstance(nbw, int):
+                k = int(batch.shape[-1])
+                nbw = self.cost.best_nbw(k, k, wbits, abits)
+            rates.append(pattern.prt_hit_rate(nbw, abits, batch))
+        return float(sum(rates) / len(rates))
+
+    # -- online recalibration ---------------------------------------------
+
+    def replan(self, tap, resolve: bool = False, slo: Optional[Slo] = None) -> PlanResult:
+        """Recalibrate against live traffic captured by an ActivationTap.
+
+        Default: keep the current allocation and re-price it with PRT
+        discounts measured on the tapped per-layer activations (cheap —
+        no probes, no solve).  ``resolve=True`` additionally re-solves
+        the allocation under the measured discounts (reusing the cached
+        sensitivity probes).  Returns a PlanResult whose
+        ``measured_prt_hit_rate`` is the traffic's PRT hit rate at the
+        plan's (nbw, act-bits) operating point.
+        """
+        calib = tap.calib() if hasattr(tap, "calib") else tap
+        if calib is None:
+            raise ValueError("tap has captured no activations yet")
+        base_plan = self.last.spec if self.last is not None else self.plan
+        if slo is None and base_plan.target_tps is not None:
+            # keep pricing (and meets_slo) at the batch the SLO was
+            # quoted at, not the cost model's default
+            slo = Slo(base_plan.target_tps, base_plan.slo_batch or self.cost.batch)
+        plan = dataclasses.replace(base_plan, prt="measured")
+        self.cost = dataclasses.replace(self.cost, prt="measured", calib=calib)
+        hit = self._traffic_hit_rate(plan, calib)
+        if resolve and plan.mode == "auto":
+            fresh = dataclasses.replace(plan, weights_per_unit=None, acts_per_unit=None)
+            result = self.solve(slo=slo, calib=calib, plan=fresh)
+        else:
+            policy = self.last.policy if self.last is not None else plan.to_policy(self.base)
+            result = PlanResult(
+                spec=plan,
+                policy=policy,
+                report=self.last.report if self.last is not None else None,
+                cost=self._price(policy, plan, calib, slo),
+            )
+            self.last = result
+        result.measured_prt_hit_rate = hit
+        return result

@@ -23,13 +23,19 @@ decode it to the end, admit again) for A/B comparison — see
 ``benchmarks/serve_bench.py``.
 
 Runs the SAIL path: weights SAIL-quantized (QTensor), KV cache optionally
-int8.  The engine is synchronous and deterministic; streaming consumers
-hook ``submit(..., on_token=...)``.
+int8.  Precision comes from a ``repro.planning.PlanSpec``
+(``EngineConfig.plan`` / ``slo``; the engine always reports one —
+``stats()["plan_hash"]``); with ``tap_capacity > 0`` an ``ActivationTap``
+captures per-layer decode inputs and ``Engine.replan()`` recalibrates
+measured PRT discounts from live traffic, hot-swapping the requantized
+weights under the running KV pool.  The engine is synchronous and
+deterministic; streaming consumers hook ``submit(..., on_token=...)``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -51,14 +57,28 @@ class EngineConfig:
     group_size: int = 128
     quant_kv: bool = True
     min_size: int = 1024           # quantize tensors >= this many elements
-    # Mixed-precision spec: None (uniform ``ql``), a QuantPolicy, a policy
-    # spec dict, or a string — "uniform:<b>[a<ab>]",
-    # "rules:<regex>=<b>[a<ab>],...", "auto:q<b>" / "auto:<f>bpw"
-    # (sensitivity-calibrated weight allocation), or
-    # "auto:q<b>a<ab>[,prt=measured][,maxseg=<n>]" (JOINT weight +
-    # activation allocation under the projected-cycle budget of uniform
-    # (b, ab)).  ``a<ab>`` selects the lutmm activation precision; see
-    # repro.core.sensitivity.parse_bit_policy.
+    # Precision plan: a repro.planning.PlanSpec (possibly solved / loaded
+    # from plan.json), a grammar string ("uniform:<b>[a<ab>]",
+    # "rules:<regex>=<b>[a<ab>],...", "auto:q<b>[a<ab>][,prt=...]
+    # [,maxseg=<n>][,slo=<tps>]", "auto:<f>bpw"), or a PlanSpec JSON
+    # dict.  Unsolved auto plans run the Planner at engine construction.
+    plan: Any = None
+    # target decode tokens/s at ``batch_size`` — makes an auto ``plan``
+    # an SLO solve (cycle AND DRAM-byte budgets derived from the target);
+    # set without ``plan`` it implies "auto:q<ql>a8,prt=measured".
+    slo: Optional[float] = None
+    # >0 attaches a repro.planning.ActivationTap of that row capacity:
+    # every ``tap_every``-th decode iteration's per-layer block inputs
+    # are captured for online PRT recalibration (Engine.replan).
+    tap_capacity: int = 0
+    tap_every: int = 1
+    # keep the raw f32 weights resident so apply_plan/replan can
+    # requantize mid-serve.  None (default) retains them exactly when a
+    # tap is attached; set True for tap-less hot-swapping, False to
+    # reclaim the memory even with a tap (replan then raises).
+    retain_raw: Optional[bool] = None
+    # DEPRECATED legacy surface (use ``plan``): None, QuantPolicy, policy
+    # spec dict, or grammar string.
     bit_policy: Any = None
     eos_token: int = -1            # -1: never stop early
     temperature: float = 0.0       # 0 = greedy
@@ -77,20 +97,98 @@ class Completion:
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig):
+        from repro import planning
         assert ecfg.mode in ("continuous", "batch"), ecfg.mode
         self.cfg = cfg
         self.ecfg = ecfg
         self.quant_policy: Optional[QuantPolicy] = None
-        if ecfg.bit_policy is not None and not ecfg.quantize:
-            raise ValueError("bit_policy requires quantize=True")
+        self.plan: Optional[planning.PlanSpec] = None
+        self.plan_report = None
+        self.replan_count = 0
+        self.prt_hit_rate: Optional[float] = None
+        self.tap: Optional[planning.ActivationTap] = None
+        self._raw_params = None
+        if (ecfg.bit_policy is not None or ecfg.plan is not None) \
+                and not ecfg.quantize:
+            raise ValueError("a precision plan requires quantize=True")
+        if ecfg.plan is not None and ecfg.bit_policy is not None:
+            raise ValueError("pass plan= OR the deprecated bit_policy=, "
+                             "not both")
+        if ecfg.slo is not None and ecfg.bit_policy is not None:
+            raise ValueError("slo= requires plan= — the deprecated "
+                             "bit_policy surface has no SLO semantics "
+                             "and would silently ignore the target")
+        if ecfg.tap_capacity > 0:
+            if ecfg.mode == "continuous":
+                self.tap = planning.ActivationTap(ecfg.tap_capacity,
+                                                  ecfg.tap_every)
+            else:
+                warnings.warn(
+                    "tap_capacity is ignored in mode='batch' — the "
+                    "ActivationTap hooks the continuous engine's masked "
+                    "decode iteration", UserWarning, stacklevel=2)
         if ecfg.quantize:
-            policy = QuantPolicy(bits=ecfg.ql, group_size=ecfg.group_size,
-                                 min_size=ecfg.min_size)
-            if ecfg.bit_policy is not None:
-                from repro.core.sensitivity import resolve_bit_policy
-                policy = resolve_bit_policy(ecfg.bit_policy, params, cfg,
-                                            policy)
+            base = self._base_policy()
+            plan_in = ecfg.plan
+            if plan_in is None and ecfg.bit_policy is None \
+                    and ecfg.slo is not None:
+                # bare --slo: joint SLO solve anchored at the engine's ql
+                plan_in = planning.PlanSpec(
+                    mode="auto", weight_bits=ecfg.ql, act_bits=8,
+                    prt="measured", quant_kv=ecfg.quant_kv)
+            if plan_in is not None:
+                plan_obj = planning.as_plan(plan_in)
+                # SLOs are quoted at this engine's decode batch, whether
+                # they arrive via EngineConfig.slo or the plan itself
+                target = (ecfg.slo if ecfg.slo is not None
+                          else plan_obj.target_tps)
+                slo = (planning.Slo(target, batch=ecfg.batch_size)
+                       if target is not None else None)
+                result = planning.resolve_plan(
+                    plan_obj, params, cfg, base=base, slo=slo,
+                    compute_cost=plan_obj.solved and slo is not None)
+                if (slo is not None and result.cost is not None
+                        and result.cost.tokens_per_second
+                        < slo.target_tps * (1 - 1e-9)):
+                    # an SLO the served plan cannot meet — whether it
+                    # arrived pre-solved or the solver just found the
+                    # budgets infeasible — must never pass silently
+                    feas = getattr(result.report, "feasible", True)
+                    warnings.warn(
+                        f"plan {result.spec.spec_hash} models "
+                        f"{result.cost.tokens_per_second:.1f} tok/s at "
+                        f"batch {slo.batch}, below the requested SLO of "
+                        f"{slo.target_tps:.1f}"
+                        + ("" if feas else " (solver budgets infeasible "
+                           "even at minimum precision)")
+                        + "; lower the target, raise the batch, or "
+                        "re-solve (Engine.replan(resolve=True))",
+                        UserWarning, stacklevel=2)
+                policy = result.policy
+                self.plan = result.spec
+                self.plan_report = result.report
+            elif ecfg.bit_policy is not None:
+                warnings.warn(
+                    "EngineConfig.bit_policy is deprecated; use "
+                    "EngineConfig.plan (a repro.planning.PlanSpec, "
+                    "grammar string, or plan JSON)", DeprecationWarning,
+                    stacklevel=2)
+                from repro.core.sensitivity import _resolve_policy_like
+                policy = _resolve_policy_like(ecfg.bit_policy, params,
+                                              cfg, base)
+                self.plan = planning.PlanSpec.from_policy(
+                    policy, quant_kv=ecfg.quant_kv)
+            else:
+                policy = base
+                self.plan = planning.PlanSpec.from_policy(
+                    policy, quant_kv=ecfg.quant_kv)
             self.quant_policy = policy
+            retain = (ecfg.retain_raw if ecfg.retain_raw is not None
+                      else self.tap is not None)
+            if retain:
+                # a 7B-class model keeps ~28 GB of f32 resident here —
+                # only pay it when hot-swap requantization is wanted
+                self._raw_params = params
             self.params, b0, b1 = quantize_params(params, policy)
             self.compression = b0 / max(b1, 1)
         else:
@@ -174,10 +272,18 @@ class Engine:
             mask = np.zeros((self.ecfg.batch_size,), bool)
             for req in active:
                 mask[req.slot] = True
-            logits, self.cache = lm.decode_step(
+            capture = (self.tap is not None
+                       and self.tap.should_capture(self.decode_iterations))
+            out = lm.decode_step(
                 self.params, jnp.asarray(self._cur[:, None]), self.cache,
                 self.cfg, quant_kv=self.ecfg.quant_kv,
-                active_mask=jnp.asarray(mask))
+                active_mask=jnp.asarray(mask),
+                capture_layer_inputs=capture)
+            if capture:
+                logits, self.cache, layer_inputs = out
+                self.tap.observe(layer_inputs, mask)
+            else:
+                logits, self.cache = out
             self.iterations += 1
             self.decode_iterations += 1
             nxt = self._sample(logits)
@@ -297,6 +403,86 @@ class Engine:
         self.sched.running = [r for r in self.sched.running
                               if r.uid not in self.completions]
 
+    # --- planning ---------------------------------------------------------
+    def _base_policy(self) -> QuantPolicy:
+        return QuantPolicy(bits=self.ecfg.ql,
+                           group_size=self.ecfg.group_size,
+                           min_size=self.ecfg.min_size)
+
+    def apply_plan(self, plan, force_requantize: bool = False) -> None:
+        """Hot-swap the engine onto a new (solved) plan mid-serve.
+
+        Requantizes the retained raw weights under the plan's policy and
+        swaps the parameter tree; the KV pool, scheduler, and every
+        in-flight request are untouched (the cache layout is independent
+        of the plan's scan segmentation), so decoding continues without
+        dropping a token.  Accepts a PlanSpec, grammar string/JSON, or a
+        ``Planner`` ``PlanResult``.
+
+        When the new plan resolves to the policy already being served
+        (e.g. a discount-only replan), the requantization pass is
+        skipped — it would produce byte-identical weights; pass
+        ``force_requantize=True`` to run it anyway.
+        """
+        from repro import planning
+        if self._raw_params is None:
+            raise ValueError("apply_plan needs the raw weights resident "
+                             "— construct the engine with quantize=True "
+                             "and retain_raw=True (or a tap attached)")
+        hit = None
+        report = None
+        if isinstance(plan, planning.PlanResult):
+            hit = plan.measured_prt_hit_rate
+            spec, policy, report = plan.spec, plan.policy, plan.report
+        else:
+            spec = planning.as_plan(plan)
+            policy = spec.to_policy(self._base_policy())
+        if force_requantize or policy != self.quant_policy:
+            self.params, b0, b1 = quantize_params(self._raw_params,
+                                                  policy)
+            self.compression = b0 / max(b1, 1)
+        self.quant_policy = policy
+        self.plan = spec
+        # the report must track the plan actually served — a stale one
+        # would describe a different allocation in stats/replans
+        self.plan_report = report
+        self.replan_count += 1
+        if hit is not None:
+            self.prt_hit_rate = hit
+
+    def replan(self, planner=None, resolve: bool = False):
+        """Online recalibration from live traffic (ROADMAP: "PRT hit
+        rates from live traffic").
+
+        Feeds the ActivationTap's captured per-layer batches to a
+        ``Planner.replan`` — measured PRT discounts refresh from real
+        activations, and ``resolve=True`` additionally re-solves the
+        allocation — then hot-swaps the result via :meth:`apply_plan`.
+        Pass an existing ``planner`` to reuse its cached sensitivity
+        probes across replans; otherwise a fresh one wraps the engine's
+        current plan.  Returns the ``PlanResult``.
+        """
+        from repro import planning
+        if self.tap is None:
+            raise ValueError("no ActivationTap attached — set "
+                             "EngineConfig.tap_capacity > 0 (taps only "
+                             "attach in mode='continuous')")
+        if self._raw_params is None:
+            raise ValueError("replan needs the raw weights resident — "
+                             "construct the engine with quantize=True "
+                             "and retain_raw=True (or rely on the tap "
+                             "default)")
+        if planner is None:
+            planner = planning.Planner(self._raw_params, self.cfg,
+                                       self.plan,
+                                       base=self._base_policy())
+            planner.last = planning.PlanResult(
+                spec=self.plan, policy=self.quant_policy,
+                report=self.plan_report)
+        result = planner.replan(self.tap, resolve=resolve)
+        self.apply_plan(result)
+        return result
+
     # --- shared -----------------------------------------------------------
     def _sample(self, logits) -> np.ndarray:
         if self.ecfg.temperature <= 0:
@@ -318,6 +504,16 @@ class Engine:
                 "weight_compression": round(self.compression, 2),
                 "mixed_precision": bool(self.quant_policy is not None
                                         and self.quant_policy.is_mixed()),
+                # plan provenance: serve_bench artifacts track churn by
+                # hash; replan_count/prt_hit_rate expose online recalib
+                "plan_hash": (self.plan.spec_hash
+                              if self.plan is not None else None),
+                "plan_mode": (self.plan.mode
+                              if self.plan is not None else None),
+                "replan_count": self.replan_count,
+                "prt_hit_rate": self.prt_hit_rate,
+                "tapped_rows": (self.tap.rows_seen
+                                if self.tap is not None else 0),
                 "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
                 "p99_latency_s": float(np.percentile(lats, 99))
                 if lats else 0.0,
