@@ -2,9 +2,17 @@
 Pallas kernels are TPU-targeted and timed structurally via the roofline).
 
 Prints name,us_per_call,derived CSV.
+
+``--calibrate`` switches to cost-model calibration: time the faithful
+LUT-GEMV across the (wbits, abits, NBW) grid, fit DecodeCostModel's
+machine constants to the measurements (``planning/calibrate_cost.py``),
+and optionally gate the modeled-vs-measured error (``--check``) / save
+the fitted-constants JSON artifact (``--calibrate PATH``).
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
@@ -15,8 +23,7 @@ from repro.kernels.lut_gemv import ref as lut_ref
 
 
 def timeit(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))  # warmup: one call, block everything
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -24,7 +31,7 @@ def timeit(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main() -> None:
+def run_microbench() -> None:
     print("\n# kernel microbench (XLA-on-CPU wall time)")
     print("name,us_per_call,derived")
     key = jax.random.PRNGKey(0)
@@ -38,6 +45,19 @@ def main() -> None:
         us = timeit(f, x)
         gmacs = 8 * 1024 * 1024 / (us * 1e-6) / 1e9
         print(f"lut_matmul_q{bits}_8x1024x1024,{us:.1f},{gmacs:.2f} GMAC/s")
+
+    # int-activation serve path (real low-bit datapath)
+    w = jax.random.normal(key, (1024, 1024))
+    x = jax.random.normal(key, (8, 1024))
+    for abits in (4, 8):
+        qt = quant.quantize(w, 4, 128)
+        import dataclasses
+        qt = dataclasses.replace(qt, abits=abits)
+        xq, xs = quant.quantize_activations(x, abits)
+        f = jax.jit(lambda xq, xs, qt=qt: lut_ref.lut_matmul_ref_int(
+            xq, xs, qt))
+        us = timeit(f, xq, xs)
+        print(f"lut_matmul_q4_a{abits}_8x1024x1024,{us:.1f},int-act path")
 
     # faithful bit-serial LUT-GEMV
     xq = jax.random.randint(key, (8, 1024), -127, 128, dtype=jnp.int32)
@@ -60,6 +80,61 @@ def main() -> None:
     f = jax.jit(lambda x: quant.quantize_activations(x, 8)[0])
     us = timeit(f, x)
     print(f"act_quant_8x4096,{us:.1f},-")
+
+
+def run_calibrate(args) -> int:
+    from repro.planning.calibrate_cost import run_calibration
+    res = run_calibration(batch=args.batch, k=args.k, n=args.n,
+                          iters=args.iters)
+    print("\n# cost-model calibration "
+          f"(backend={res.backend}, B={args.batch} K={args.k} N={args.n})")
+    print("wbits,abits,nbw,measured_us,modeled_us,rel_err")
+    freq = 3.0e9
+    for p in res.points:
+        print(f"{p['wbits']},{p['abits']},{p['nbw']},"
+              f"{p['measured_cycles'] / freq * 1e6:.1f},"
+              f"{p['modeled_cycles'] / freq * 1e6:.1f},{p['rel_err']:.3f}")
+    print("# fitted machine overrides:")
+    for kk, v in sorted(res.machine_overrides.items()):
+        print(f"#   {kk} = {v:.6g}")
+    print(f"# max_rel_err={res.max_rel_err:.3f} "
+          f"mean_rel_err={res.mean_rel_err:.3f} "
+          f"stream_bw={res.dram_bw_measured / 1e9:.2f} GB/s")
+    if args.calibrate:
+        res.save(args.calibrate)
+        print(f"# saved fitted constants -> {args.calibrate}")
+    if args.check:
+        ok = (res.max_rel_err <= args.max_rel_err
+              and res.mean_rel_err <= args.mean_rel_err)
+        print(f"# check: max {res.max_rel_err:.3f} <= {args.max_rel_err} "
+              f"and mean {res.mean_rel_err:.3f} <= {args.mean_rel_err}: "
+              f"{'PASS' if ok else 'FAIL'}")
+        return 0 if ok else 1
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calibrate", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="run cost-model calibration; save fitted-constants"
+                         " JSON to PATH when given")
+    ap.add_argument("--check", action="store_true",
+                    help="with --calibrate: exit nonzero if the "
+                         "modeled-vs-measured error exceeds the bounds")
+    ap.add_argument("--max-rel-err", type=float, default=1.5,
+                    help="--check bound on the worst grid point")
+    ap.add_argument("--mean-rel-err", type=float, default=0.5,
+                    help="--check bound on the grid mean")
+    ap.add_argument("--iters", type=int, default=10,
+                    help="timing repetitions per grid point")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--k", type=int, default=512)
+    ap.add_argument("--n", type=int, default=256)
+    args = ap.parse_args()
+    if args.calibrate is not None:
+        sys.exit(run_calibrate(args))
+    run_microbench()
 
 
 if __name__ == "__main__":

@@ -209,12 +209,31 @@ def run_slo(args, cfg, params, tokens, fwd, ref, base):
     strictly lower true output error — ``--check`` asserts both halves:
     the plan meets its target under the model, at lower error than the
     fixed-budget baseline.
+
+    ``--calibration PATH`` swaps the paper's machine constants for fitted
+    ones (``kernel_bench --calibrate``): the solve then budgets against
+    measured hardware, and the saved plan records the provenance.  With
+    fitted (host-scale) compute constants the tiny proxy would be
+    compute-bound, so unless ``--dram-bw`` is given explicitly the
+    bandwidth is auto-scaled to keep the byte-blind baseline ~8x
+    DRAM-bound — the regime the SLO decomposition exercises.
     """
-    machine = dataclasses.replace(cm.SailMachine(), dram_bw=args.dram_bw)
+    calib = None
+    machine_base = cm.SailMachine()
+    if args.calibration:
+        from repro.planning.calibrate_cost import CalibrationResult
+
+        calib = CalibrationResult.load(args.calibration)
+        machine_base = calib.machine()
+    dram_bw = args.dram_bw
+    if dram_bw is None:
+        dram_bw = machine_base.dram_bw if calib is not None else 2e9
+    machine = dataclasses.replace(machine_base, dram_bw=dram_bw)
     cost = planning.DecodeCostModel(machine=machine, prt=args.prt, batch=args.slo_batch)
+    tag = f", calibrated[{calib.backend}]" if calib is not None else ""
     print(
         f"\n=== SLO-driven plan vs fixed cycle budget "
-        f"(prt={args.prt}, dram_bw={args.dram_bw:.2e} B/s) ==="
+        f"(prt={args.prt}, dram_bw={dram_bw:.2e} B/s{tag}) ==="
     )
     scores = sens.output_sensitivity(params, cfg, tokens, base)
     act_scores = sens.activation_sensitivity(
@@ -235,10 +254,27 @@ def run_slo(args, cfg, params, tokens, fwd, ref, base):
         cost_batch=args.slo_batch,
     )
     bcost = cost.evaluate(params, bpol)
+    if calib is not None and args.dram_bw is None:
+        # auto-scale the DRAM side (the baseline solve above is byte-blind,
+        # so only the evaluation changes): bw such that the baseline's
+        # weight stream takes 8x its compute time
+        t_c = bcost.cycles / machine.freq_hz
+        dram_bw = bcost.total_bytes / (8.0 * t_c * machine.dram_efficiency)
+        machine = dataclasses.replace(machine, dram_bw=dram_bw)
+        cost = planning.DecodeCostModel(machine=machine, prt=args.prt, batch=args.slo_batch)
+        bcost = cost.evaluate(params, bpol)
+        print(f"auto-scaled dram_bw -> {dram_bw:.2e} B/s (baseline 8x DRAM-bound)")
 
     target = args.slo if args.slo else bcost.tokens_per_second
     slo = planning.Slo(target, batch=args.slo_batch)
-    plan = planning.PlanSpec(mode="auto", weight_bits=4, act_bits=8, prt=args.prt, quant_kv=True)
+    plan = planning.PlanSpec(
+        mode="auto",
+        weight_bits=4,
+        act_bits=8,
+        prt=args.prt,
+        quant_kv=True,
+        calibration=calib.provenance() if calib is not None else None,
+    )
     planner = planning.Planner(
         params,
         cfg,
@@ -282,7 +318,8 @@ def run_slo(args, cfg, params, tokens, fwd, ref, base):
 
     result = {
         "prt": args.prt,
-        "dram_bw": args.dram_bw,
+        "dram_bw": dram_bw,
+        "calibrated": calib is not None,
         "target_tps": target,
         "baseline": {
             "err": b_err,
@@ -363,9 +400,19 @@ def main():
     ap.add_argument(
         "--dram-bw",
         type=float,
-        default=2e9,
-        help="machine DRAM bandwidth for --slo mode (default scaled down so the "
-        "tiny proxy model is byte-bound the way a 7B model is on real hardware)",
+        default=None,
+        help="machine DRAM bandwidth for --slo mode (default 2e9, scaled down "
+        "so the tiny proxy model is byte-bound the way a 7B model is on real "
+        "hardware; with --calibration the default auto-scales to keep the "
+        "baseline DRAM-bound under the fitted constants)",
+    )
+    ap.add_argument(
+        "--calibration",
+        default=None,
+        metavar="PATH",
+        help="fitted-constants JSON from 'kernel_bench --calibrate PATH': "
+        "--slo mode then budgets against the measured machine and records "
+        "the provenance in the solved plan",
     )
     ap.add_argument("--save-plan", default=None, help="write the solved SLO plan JSON here")
     args = ap.parse_args()

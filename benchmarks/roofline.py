@@ -12,6 +12,11 @@ and the MODEL_FLOPS / HLO_FLOPs usefulness ratio (remat / redundancy /
 dispatch waste shows up here).
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline runs/dryrun.jsonl
+
+``--calibration PATH`` switches to the *measured* roofline: reads a
+fitted-constants artifact (``kernel_bench --calibrate PATH``) and prints
+the modeled-vs-measured LUT-GEMV grid plus the fitted machine — the
+measurement the cost model is held to.
 """
 from __future__ import annotations
 
@@ -166,7 +171,35 @@ def print_table(rows: List[dict]) -> None:
               f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} {ur:>7s}")
 
 
+def print_calibration(path: str) -> None:
+    """Measured roofline from a calibration artifact."""
+    from repro.planning.calibrate_cost import CalibrationResult
+    res = CalibrationResult.load(path)
+    b, k, n = res.shape
+    print(f"# measured LUT-GEMV roofline (backend={res.backend}, "
+          f"B={b} K={k} N={n})")
+    hdr = (f"{'wbits':>5s} {'abits':>5s} {'nbw':>4s} "
+           f"{'measured(us)':>13s} {'modeled(us)':>12s} {'rel_err':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    freq = 3.0e9
+    for p in res.points:
+        print(f"{p['wbits']:5d} {p['abits']:5d} {p['nbw']:4d} "
+              f"{p['measured_cycles'] / freq * 1e6:13.1f} "
+              f"{p['modeled_cycles'] / freq * 1e6:12.1f} "
+              f"{p['rel_err']:8.3f}")
+    print(f"\nfitted machine overrides:")
+    for kk, v in sorted(res.machine_overrides.items()):
+        print(f"  {kk:22s} = {v:.6g}")
+    print(f"stream bandwidth: {res.dram_bw_measured / 1e9:.2f} GB/s")
+    print(f"max_rel_err={res.max_rel_err:.3f} "
+          f"mean_rel_err={res.mean_rel_err:.3f}")
+
+
 def main() -> None:
+    if "--calibration" in sys.argv:
+        print_calibration(sys.argv[sys.argv.index("--calibration") + 1])
+        return
     path = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.jsonl"
     records = [json.loads(l) for l in open(path)]
     # keep the newest record per cell

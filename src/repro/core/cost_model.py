@@ -55,6 +55,7 @@ class SailMachine:
     lookup_per_bit_cycles: float = 5.94    # accumulate slope per weight bit
     rebuild_ctrl_cycles: float = 9900.0    # per-group residency swap / ctrl
     rebuild_nbw_exp: float = 4.4           # dataflow penalty ~ (2/nbw)^exp
+    build_overhead: float = 1.0            # fitted multiplier on adds+load
     thread_scale_tau: float = 0.0          # SAIL multi-thread contention
     dram_efficiency: float = 0.92          # achieved fraction of peak BW
 
@@ -119,7 +120,7 @@ def lut_build_cycles(m: SailMachine, nbw: int, wbits: int) -> float:
     adds = n_adds * m.add_cycles(entry_bits)
     load = nbw * 2.0  # stream nbw rows through the transposer (512b/row)
     ctrl = m.rebuild_ctrl_cycles * (2.0 / nbw) ** m.rebuild_nbw_exp
-    return adds + load + ctrl
+    return (adds + load) * m.build_overhead + ctrl
 
 
 def lookup_cycles(m: SailMachine, wbits: int, kernel_level: bool = False) -> float:
@@ -193,11 +194,12 @@ def model_weight_bytes(model: ModelSpec, ql: int) -> float:
 def qtensor_bytes(k: int, n: int, bits: int, group_size: int = 128,
                   copies: int = 1) -> int:
     """Exact bytes of one SAIL-quantized [K, N] weight in the repo's
-    QTensor storage: group-aligned packed uint32 words + f32 group scales
+    QTensor storage: bit-contiguous packed uint32 words + f32 group scales
     (``copies`` folds stacked layers / MoE experts).  This is the byte
-    accounting the mixed-precision allocator budgets against."""
-    vpw = 32 // bits
-    wpg = -(-group_size // vpw)                  # ceil: words per group
+    accounting the mixed-precision allocator budgets against — strictly
+    monotone in ``bits`` for every group size >= 32 (matches
+    ``quant.words_per_group``)."""
+    wpg = -(-(bits * group_size) // 32)          # ceil: words per group
     groups = k // group_size
     return copies * (groups * wpg * n * 4 + groups * n * 4)
 

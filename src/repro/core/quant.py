@@ -8,6 +8,9 @@ group-wise scales.  This module provides:
     quantization along the reduction axis (rows of ``W[K, N]``).
   * ``pack_bits`` / ``unpack_bits`` — field packing of b-bit codes into
     uint32 words (``32 // b`` values per word; 3/5/6-bit waste 2 bits/word).
+  * ``pack_grouped`` / ``unpack_grouped`` — bit-contiguous group packing
+    (``ceil(b*G/32)`` words per group; codes may straddle word boundaries
+    so packed bytes are strictly monotone in ``b``).
   * ``QTensor``                    — pytree carrying packed codes + scales +
     codebook, the storage format streamed HBM->VMEM by the Pallas kernel.
   * per-token activation quantization for the integer LUT-GEMV path.
@@ -28,6 +31,12 @@ import numpy as np
 
 SUPPORTED_BITS = (2, 3, 4, 5, 6, 8)
 
+# Precisions the storage/kernel layer handles.  1-bit (sign) weights are a
+# kernel-level capability (the LUT formulation supports them for free) but
+# stay out of SUPPORTED_BITS: the allocator's candidate set and the policy
+# grammar keep the paper's 2..8-bit ``ql`` range.
+KERNEL_BITS = (1,) + SUPPORTED_BITS
+
 # Activation precisions the ``lutmm`` instruction parameterizes (the
 # second precision field next to ``ql``).  ``None`` anywhere an abits is
 # accepted means "serve f32 activations" (no activation quantization).
@@ -35,9 +44,9 @@ SUPPORTED_ABITS = (4, 6, 8)
 
 
 def values_per_word(bits: int) -> int:
-    """Number of b-bit codes packed per uint32 word."""
-    if bits not in SUPPORTED_BITS:
-        raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {bits}")
+    """Number of b-bit codes fully contained per uint32 word."""
+    if bits not in KERNEL_BITS:
+        raise ValueError(f"bits must be one of {KERNEL_BITS}, got {bits}")
     return 32 // bits
 
 
@@ -79,53 +88,73 @@ def unpack_bits(packed: jax.Array, bits: int, k: Optional[int] = None) -> jax.Ar
 
 
 def words_per_group(bits: int, group_size: int) -> int:
-    """uint32 words holding one quantization group's codes."""
-    vpw = values_per_word(bits)
-    return -(-group_size // vpw)  # ceil
+    """uint32 words holding one quantization group's codes.
+
+    Packing is bit-contiguous within a group (codes may straddle word
+    boundaries), so a group costs exactly ``ceil(bits * G / 32)`` words.
+    This makes packed bytes strictly monotone in ``bits`` for every
+    group size >= 32 — the old value-aligned layout collapsed 3/4-bit
+    (and 5/6-bit) to identical sizes at group 32, flattening Pareto
+    sweeps over the bit ladder.
+    """
+    if bits not in KERNEL_BITS:
+        raise ValueError(f"bits must be one of {KERNEL_BITS}, got {bits}")
+    return -(-(bits * group_size) // 32)  # ceil
 
 
 def pack_grouped(codes: jax.Array, bits: int, group_size: int) -> jax.Array:
-    """Group-aligned packing: each quantization group of ``group_size``
-    codes occupies an integer number of uint32 words (trailing slots zero).
+    """Group-aligned, bit-contiguous packing: each quantization group of
+    ``group_size`` codes occupies ``ceil(bits*G/32)`` uint32 words, with
+    the codes laid down as a little-endian bitstream (code ``v`` occupies
+    stream bits ``[v*bits, (v+1)*bits)``; trailing stream bits zero).
 
-    This keeps every group word-aligned so a kernel block covering
-    ``bk`` K-rows maps to exactly ``(bk // group_size) * wpg`` packed rows
-    — the TPU analogue of SAIL keeping one group's LUT per C-SRAM
-    residency.  codes: [K, N] -> packed uint32 [(K//G)*wpg, N].
+    Groups stay word-aligned so a kernel block covering ``bk`` K-rows
+    maps to exactly ``(bk // group_size) * wpg`` packed rows — the TPU
+    analogue of SAIL keeping one group's LUT per C-SRAM residency.  When
+    ``32 % bits == 0`` the layout coincides with plain value-aligned
+    packing.  codes: [K, N] -> packed uint32 [(K//G)*wpg, N].
     """
     k = codes.shape[0]
     if k % group_size != 0:
         raise ValueError(f"K={k} not a multiple of group_size={group_size}")
-    vpw = values_per_word(bits)
     wpg = words_per_group(bits, group_size)
     g = k // group_size
+    n_slots = wpg * 32  # stream bit positions per group
     grouped = codes.reshape((g, group_size) + codes.shape[1:])
-    pad = wpg * vpw - group_size
+    pad = -(-n_slots // bits) - group_size  # values covering every slot
     if pad:
         grouped = jnp.concatenate(
             [grouped, jnp.zeros((g, pad) + codes.shape[1:], codes.dtype)],
             axis=1)
-    grouped = grouped.astype(jnp.uint32).reshape(
-        (g, wpg, vpw) + codes.shape[1:])
-    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits).reshape(
-        (1, 1, vpw) + (1,) * (codes.ndim - 1))
-    words = jnp.sum(grouped << shifts, axis=2, dtype=jnp.uint32)
+    grouped = grouped.astype(jnp.uint32)
+    t = np.arange(n_slots)
+    src = jnp.asarray(t // bits, dtype=jnp.int32)
+    sh = jnp.asarray(t % bits, dtype=jnp.uint32).reshape(
+        (1, n_slots) + (1,) * (codes.ndim - 1))
+    stream = (grouped[:, src] >> sh) & jnp.uint32(1)
+    stream = stream.reshape((g, wpg, 32) + codes.shape[1:])
+    wshifts = jnp.arange(32, dtype=jnp.uint32).reshape(
+        (1, 1, 32) + (1,) * (codes.ndim - 1))
+    words = jnp.sum(stream << wshifts, axis=2, dtype=jnp.uint32)
     return words.reshape((g * wpg,) + codes.shape[1:])
 
 
 def unpack_grouped(packed: jax.Array, bits: int, group_size: int,
                    k: int) -> jax.Array:
     """Inverse of :func:`pack_grouped` -> int32 [K, ...]."""
-    vpw = values_per_word(bits)
     wpg = words_per_group(bits, group_size)
     g = k // group_size
-    mask = jnp.uint32((1 << bits) - 1)
     words = packed.reshape((g, wpg) + packed.shape[1:])
-    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits).reshape(
-        (1, 1, vpw) + (1,) * (packed.ndim - 1))
-    codes = (words[:, :, None] >> shifts) & mask
-    codes = codes.reshape((g, wpg * vpw) + packed.shape[1:])
-    return codes[:, :group_size].reshape((k,) + packed.shape[1:]).astype(jnp.int32)
+    wshifts = jnp.arange(32, dtype=jnp.uint32).reshape(
+        (1, 1, 32) + (1,) * (packed.ndim - 1))
+    stream = (words[:, :, None] >> wshifts) & jnp.uint32(1)
+    stream = stream.reshape((g, wpg * 32) + packed.shape[1:])
+    stream = stream[:, :group_size * bits].reshape(
+        (g, group_size, bits) + packed.shape[1:])
+    bshifts = jnp.arange(bits, dtype=jnp.uint32).reshape(
+        (1, 1, bits) + (1,) * (packed.ndim - 1))
+    codes = jnp.sum(stream << bshifts, axis=2, dtype=jnp.uint32)
+    return codes.reshape((k,) + packed.shape[1:]).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -144,8 +173,9 @@ class QTensor:
       bits, group_size, k: static metadata.
       abits    : activation precision this matmul serves at (the lutmm
                  instruction's second precision field); None keeps f32
-                 activations.  ``mm`` fake-quantizes activations per token
-                 at ``abits`` before dispatching when set.
+                 activations.  When set, ``mm``/``einsum_q`` run the real
+                 integer path: per-token ``abits`` codes enter the kernel
+                 and the scale is applied to the output.
     """
     packed: jax.Array
     scales: jax.Array
@@ -171,6 +201,9 @@ class QTensor:
 
 def _uniform_codebook(bits: int) -> jnp.ndarray:
     """Symmetric uniform codebook: code q -> q - 2^(b-1) (signed grid)."""
+    if bits == 1:
+        # sign codebook: the signed grid degenerates to [-1, 0] at 1 bit
+        return jnp.asarray([-1.0, 1.0], dtype=jnp.float32)
     qmax = (1 << (bits - 1)) - 1
     grid = jnp.arange(1 << bits, dtype=jnp.float32) - float(1 << (bits - 1))
     # normalise so max |entry| == 1; scale carries the magnitude

@@ -744,7 +744,8 @@ def segment_count(assign: Mapping[UnitKey, Any]) -> int:
 def enforce_max_segments(units: Sequence[Unit],
                          assign: Dict[UnitKey, Any],
                          max_segments: int,
-                         err_of=None) -> Dict[UnitKey, Any]:
+                         err_of=None,
+                         bytes_of=None) -> Dict[UnitKey, Any]:
     """Cap the number of scan segments by merging adjacent segments.
 
     Each uniform-bits segment compiles its own scan body, so an
@@ -756,10 +757,14 @@ def enforce_max_segments(units: Sequence[Unit],
     lossless case); equal-adjacent layers never count as separate
     segments in the first place (see :func:`segment_count`).
 
-    Merging adopts a neighboring segment's state wholesale, so the
-    result can exceed the byte/cycle budget the assignment was solved
-    under — ``calibrate_policy`` re-derives the report's ``feasible``
-    flag after capping for exactly this reason.
+    With a ``bytes_of(unit, state)`` hook, a direction that grows the
+    byte footprint is taken only when no byte-neutral direction exists:
+    merging must spend error, not the byte budget the assignment was
+    solved under (one side of every disagreeing pair adopts the
+    narrower state, so a non-growing direction always exists for
+    weight bits).  Joint (wbits, abits) merges can still leave the
+    *cycle* budget — ``calibrate_policy`` re-derives the report's
+    ``feasible`` flag after capping for exactly this reason.
     """
     if max_segments < 1:
         raise ValueError(f"max_segments must be >= 1, got {max_segments}")
@@ -798,7 +803,21 @@ def enforce_max_segments(units: Sequence[Unit],
                               - err_of(by_key[(p, layer)],
                                        assign[(p, layer)])
                               for layer in range(a, b))
-                if d_left <= d_right:
+                take_left = d_left <= d_right
+                if bytes_of is not None:
+                    b_left = sum(bytes_of(by_key[(p, layer)], lv)
+                                 - bytes_of(by_key[(p, layer)],
+                                            assign[(p, layer)])
+                                 for layer in range(b, c))
+                    b_right = sum(bytes_of(by_key[(p, layer)], rv)
+                                  - bytes_of(by_key[(p, layer)],
+                                             assign[(p, layer)])
+                                  for layer in range(a, b))
+                    if b_left > 0 and b_right <= 0:
+                        take_left = False
+                    elif b_right > 0 and b_left <= 0:
+                        take_left = True
+                if take_left:
                     delta += d_left
                     for layer in range(b, c):
                         moves[(p, layer)] = lv
@@ -1003,7 +1022,12 @@ def calibrate_policy(params, cfg, policy=None, budget_bytes=None,
                                bits_candidates, pinned)
     assign = dict(report.bits_by_unit)
     if max_segments is not None:
-        capped = enforce_max_segments(units, assign, max_segments)
+        def seg_bytes(u, s):
+            return unit_bytes(u.k, u.n, s[0] if joint else s,
+                              policy.group_size, u.copies)
+
+        capped = enforce_max_segments(units, assign, max_segments,
+                                      bytes_of=seg_bytes)
         if capped != assign:
             assign = capped
             nbytes = sum(unit_bytes(

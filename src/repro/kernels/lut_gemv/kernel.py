@@ -13,9 +13,21 @@ TPU adaptation of the paper's C-SRAM LUT-GEMV (see DESIGN.md Sec. 2):
     weight in HBM, so HBM bytes drop by ~(16/bits)x exactly as C-SRAM
     computing removes the LLC-external weight traffic.
 
+Two activation flavours, matching the ``lutmm`` instruction's dual
+precision fields (``ql`` for weights, abits for activations):
+
+  * ``_lut_matmul_kernel``      — f32 activations (abits None);
+  * ``_lut_matmul_int_kernel``  — int activation codes + per-token scales
+    from ``quantize_activations``.  The codes are converted in-kernel with
+    the paper's Algorithm-1 bitline typeconv (``int_to_f32_compute``) and
+    the per-token scale is folded in at the accumulator store, so the
+    executed datapath consumes exactly the ``abits`` integers the
+    allocator priced — no fake-quant in the serve path.
+
 Grid: (M/bm, N/bn, K/bk) with K innermost (accumulation).  The packed
-operand is group-aligned (``pack_grouped``) so each K-block maps to an
-integer number of packed rows.
+operand is group-aligned (``pack_grouped``: ``ceil(bits*G/32)`` words per
+group, bit-contiguous) so each K-block maps to an integer number of
+packed rows.
 """
 from __future__ import annotations
 
@@ -26,7 +38,40 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quant import values_per_word, words_per_group
+from repro.core.quant import words_per_group
+from repro.kernels.typeconv.kernel import int_to_f32_compute
+
+
+def _unpack_codes(words, *, bits: int, group_size: int, groups: int, bn: int):
+    """Decode the bit-contiguous packed block -> int32 codes [g, G, bn].
+
+    Mirrors ``quant.unpack_grouped``: each group is a little-endian
+    bitstream over ``wpg = ceil(bits*G/32)`` uint32 words; code ``v``
+    occupies stream bits ``[v*bits, (v+1)*bits)``.  Pure shift/and/sum —
+    no gathers — so it lowers on the TPU vector unit.
+    """
+    wpg = words_per_group(bits, group_size)
+    words = words.reshape(groups, wpg, bn)
+    wshifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :, None]
+    stream = (words[:, :, None, :] >> wshifts) & jnp.uint32(1)
+    stream = stream.reshape(groups, wpg * 32, bn)[:, :group_size * bits, :]
+    stream = stream.reshape(groups, group_size, bits, bn)
+    bshifts = jnp.arange(bits, dtype=jnp.uint32)[None, None, :, None]
+    codes = jnp.sum(stream << bshifts, axis=2, dtype=jnp.uint32)
+    return codes.astype(jnp.int32)
+
+
+def _dequant_block(packed_ref, scales_ref, codebook_ref, *, bits: int,
+                   group_size: int, bk: int):
+    """LUT dequant of one packed (K-block, bn) tile -> f32 [bk, bn]."""
+    bn = packed_ref.shape[-1]
+    groups = bk // group_size
+    codes = _unpack_codes(packed_ref[...], bits=bits, group_size=group_size,
+                          groups=groups, bn=bn)
+    lut = codebook_ref[...]                               # [2**bits]
+    w = jnp.take(lut, codes, axis=0)                      # [g, G, bn]
+    w = w * scales_ref[...][:, None, :]                   # group-wise scale
+    return w.reshape(bk, bn)
 
 
 def _lut_matmul_kernel(x_ref, packed_ref, scales_ref, codebook_ref, o_ref,
@@ -39,23 +84,8 @@ def _lut_matmul_kernel(x_ref, packed_ref, scales_ref, codebook_ref, o_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    vpw = values_per_word(bits)
-    wpg = words_per_group(bits, group_size)
-    groups = bk // group_size
-    bn = packed_ref.shape[-1]
-
-    # ---- unpack b-bit codes from the packed uint32 block ----------------
-    words = packed_ref[...].reshape(groups, wpg, bn)
-    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, None, :, None]
-    mask = jnp.uint32((1 << bits) - 1)
-    codes = (words[:, :, None, :] >> shifts) & mask      # [g, wpg, vpw, bn]
-    codes = codes.reshape(groups, wpg * vpw, bn)[:, :group_size, :]
-
-    # ---- LUT dequant: gather VMEM-resident codebook, apply group scale --
-    lut = codebook_ref[...]                               # [2**bits]
-    w = jnp.take(lut, codes.astype(jnp.int32), axis=0)    # [g, G, bn]
-    w = w * scales_ref[...][:, None, :]                   # group-wise scale
-    w = w.reshape(bk, bn)
+    w = _dequant_block(packed_ref, scales_ref, codebook_ref, bits=bits,
+                       group_size=group_size, bk=bk)
 
     # ---- MXU matmul, f32 accumulation -----------------------------------
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
@@ -66,21 +96,59 @@ def _lut_matmul_kernel(x_ref, packed_ref, scales_ref, codebook_ref, o_ref,
         o_ref[...] = acc_ref[...].astype(out_dtype)
 
 
+def _lut_matmul_int_kernel(x_ref, xs_ref, packed_ref, scales_ref,
+                           codebook_ref, o_ref, acc_ref, *, bits: int,
+                           group_size: int, bk: int, n_k: int, abits: int,
+                           out_dtype):
+    """Int-activation tile: x_ref carries ``abits``-bit signed codes.
+
+    The codes are widened to f32 with Algorithm-1 typeconv (exact for
+    abits-bit ints) and the per-token scale ``xs`` is applied once at the
+    final store, so y == (x_q @ dequant(W)) * xs bit-for-bit with the ref.
+    """
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_block(packed_ref, scales_ref, codebook_ref, bits=bits,
+                       group_size=group_size, bk=bk)
+
+    xf = int_to_f32_compute(x_ref[...], n=abits)          # exact int -> f32
+    acc_ref[...] += jnp.dot(xf, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...] * xs_ref[...]).astype(out_dtype)
+
+
+def _common_specs(bits, group_size, bk, bm, bn):
+    wpg = words_per_group(bits, group_size)
+    pk_rows = (bk // group_size) * wpg
+    return [
+        pl.BlockSpec((pk_rows, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk // group_size, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1 << bits,), lambda i, j, kk: (0,)),
+    ]
+
+
 @functools.partial(jax.jit, static_argnames=(
     "bits", "group_size", "k", "bm", "bn", "bk", "out_dtype", "interpret"))
 def lut_matmul_pallas(x, packed, scales, codebook, *, bits: int,
                       group_size: int, k: int, bm: int = 8, bn: int = 256,
                       bk: int = 512, out_dtype=jnp.float32,
-                      interpret: bool = True):
+                      interpret: bool = False):
     """y[M, N] = x[M, K] @ dequant(packed, scales, codebook).
 
     All of M % bm, N % bn, K % bk, bk % group_size must be 0 (ops.py pads).
+    Backend selection (compiled vs interpret) lives in ops.py: pass
+    ``interpret=True`` only off-TPU — a real TPU run must never silently
+    execute the interpreter.
     """
     m, kx = x.shape
     assert kx == k, (kx, k)
     n = packed.shape[-1]
-    wpg = words_per_group(bits, group_size)
-    pk_rows = (bk // group_size) * wpg
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
 
@@ -91,14 +159,45 @@ def lut_matmul_pallas(x, packed, scales, codebook, *, bits: int,
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((pk_rows, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk // group_size, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1 << bits,), lambda i, j, kk: (0,)),
-        ],
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))]
+        + _common_specs(bits, group_size, bk, bm, bn),
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, packed, scales, codebook)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "k", "abits", "bm", "bn", "bk", "out_dtype",
+    "interpret"))
+def lut_matmul_int_pallas(x_q, x_scale, packed, scales, codebook, *,
+                          bits: int, group_size: int, k: int, abits: int,
+                          bm: int = 8, bn: int = 256, bk: int = 512,
+                          out_dtype=jnp.float32, interpret: bool = False):
+    """y[M, N] = (x_q[M, K] @ dequant(...)) * x_scale[M, 1].
+
+    x_q: int32 ``abits``-bit signed activation codes; x_scale: per-token
+    f32 scales, both from ``quant.quantize_activations``.
+    """
+    m, kx = x_q.shape
+    assert kx == k, (kx, k)
+    n = packed.shape[-1]
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    kernel = functools.partial(
+        _lut_matmul_int_kernel, bits=bits, group_size=group_size, bk=bk,
+        n_k=n_k, abits=abits, out_dtype=out_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0))]
+        + _common_specs(bits, group_size, bk, bm, bn),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_q, x_scale, packed, scales, codebook)

@@ -13,3 +13,18 @@ def lut_matmul_ref(x: jax.Array, qt: QTensor,
     w = dequantize(qt)
     return jnp.dot(x.astype(jnp.float32), w,
                    preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def lut_matmul_ref_int(x_q: jax.Array, x_scale: jax.Array, qt: QTensor,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Int-activation oracle: y = (x_q @ dequant(qt)) * x_scale.
+
+    x_q int32 codes and x_scale f32 [M, 1] per-token scales from
+    ``quant.quantize_activations``.  The scale is applied *after* the
+    integer-code matmul — the serve-path semantics the kernel realizes —
+    not folded into x beforehand (mathematically equal, not bitwise).
+    """
+    w = dequantize(qt)
+    y = jnp.dot(x_q.astype(jnp.float32), w,
+                preferred_element_type=jnp.float32)
+    return (y * x_scale).astype(out_dtype)

@@ -20,8 +20,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _typeconv_kernel(a_ref, o_ref, *, n: int):
-    a = a_ref[...].astype(jnp.int32)
+def int_to_f32_compute(a: jax.Array, n: int) -> jax.Array:
+    """Algorithm-1 body on an int32 array of n-bit signed values.
+
+    Pure bit-ops (shift/and/or/xor/int-mul) + one bitcast — usable both as
+    the typeconv kernel body and fused inside other Pallas kernels (the
+    LUT-GEMV int-activation path converts its activation block with this,
+    mirroring the paper's PIM typeconv feeding the GEMV datapath).
+    """
+    a = a.astype(jnp.int32)
     sign = (a >> 31) & 1
     mag = jnp.where(sign == 1, -a, a).astype(jnp.uint32)
     nm1 = n - 1
@@ -57,7 +64,11 @@ def _typeconv_kernel(a_ref, o_ref, *, n: int):
         mant = aligned & jnp.uint32((1 << (nm1 - 1)) - 1)
         r = r | (mant << (23 - (nm1 - 1)))
     r = jnp.where(mag == 0, jnp.uint32(0), r)
-    o_ref[...] = jax.lax.bitcast_convert_type(r, jnp.float32)
+    return jax.lax.bitcast_convert_type(r, jnp.float32)
+
+
+def _typeconv_kernel(a_ref, o_ref, *, n: int):
+    o_ref[...] = int_to_f32_compute(a_ref[...], n)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))

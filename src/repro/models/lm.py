@@ -66,6 +66,10 @@ def _layer_slice(stacked, i):
 # only carry one static ``bits``/``abits`` pair per stacked leaf — a
 # segment is maximal in the JOINT (wbits, abits) assignment, so an
 # activation-precision change cuts the stack exactly like a weight one.
+# Inside a segment, every ``mm`` on a leaf carrying ``abits`` runs the
+# *real* int-activation LUT-GEMV path (integer codes + per-token scale
+# through the kernel), so the served datapath matches what the joint
+# allocator priced.
 # All model entry points below scan the segments back-to-back; a plain
 # (non-list) blocks tree is the 1-segment case and lowers exactly as
 # before.  Each segment traces and compiles its own scan body, so

@@ -32,10 +32,13 @@ Activation precision: the ``lutmm`` instruction parameterizes *both* the
 weight (``ql``) and the activation precision per call, so the policy also
 resolves ``abits`` per path (``act_rules`` / ``allocation.act_per_path`` /
 ``act_bits``).  A quantized leaf carries its allocated ``abits`` as static
-metadata and ``mm`` fake-quantizes the incoming activations per token at
-that precision (``abits=None`` keeps today's f32-activation semantics).
-Per-layer ``abits`` tuples segment the scan stack exactly like weight
-bits do — a segment is maximal in the *joint* (wbits, abits) assignment.
+metadata and ``mm``/``einsum_q`` run the *real* integer path: activations
+are quantized per token (``quantize_activations``) and the integer codes
+plus per-token scale enter the LUT-GEMV kernel directly (``abits=None``
+keeps today's f32-activation semantics).  Fake-quant survives only as the
+calibration probe (``ActQuantWeight``).  Per-layer ``abits`` tuples
+segment the scan stack exactly like weight bits do — a segment is maximal
+in the *joint* (wbits, abits) assignment.
 """
 from __future__ import annotations
 
@@ -77,19 +80,17 @@ def act_fake_quant(x: jax.Array, abits: int) -> jax.Array:
 
 
 def _apply_act_quant(x: jax.Array, w: Any):
-    """Shared activation-precision dispatch for ``mm``/``einsum_q``.
+    """Unwrap an ``ActQuantWeight`` probe (gate-blended fake-quant, so one
+    scan pass can probe a single layer of a stack).
 
-    Unwraps an ``ActQuantWeight`` probe (gate-blended fake-quant, so one
-    scan pass can probe a single layer of a stack) and applies the
-    allocated ``abits`` of a quantized weight to float inputs.  Returns
-    the (possibly quantized) activations and the unwrapped weight."""
+    This is the *only* place fake-quant touches activations: quantized
+    leaves carrying ``abits`` run the real integer path inside
+    ``mm``/``einsum_q`` instead.  Returns the (possibly probed)
+    activations and the unwrapped weight."""
     if isinstance(w, ActQuantWeight):
         fq = act_fake_quant(x, w.abits)
         x = x + w.gate.astype(x.dtype) * (fq - x)
         w = w.w
-    elif (isinstance(w, (QTensor, StackedQTensor)) and w.abits is not None
-          and not jnp.issubdtype(x.dtype, jnp.integer)):
-        x = act_fake_quant(x, w.abits)
     return x, w
 
 
@@ -529,9 +530,47 @@ def dequantize_any(w):
     return w
 
 
+def _einsum_scale_to_out(spec: str, x_shape, xs: jax.Array) -> Optional[jax.Array]:
+    """Broadcast per-token activation scales to the einsum output.
+
+    For ``spec`` where x's last subscript is the contracted axis and every
+    other x subscript appears in the output (all MoE expert einsums),
+    returns ``xs`` reshaped/transposed so ``einsum(xq, w) * xs_out`` equals
+    the serve-path semantics.  Returns None when the spec doesn't fit
+    (caller falls back to folding the scale into the input)."""
+    lhs, out = spec.split("->")
+    x_sub, _ = lhs.split(",")
+    keep = x_sub[:-1]                       # non-contracted x subscripts
+    if x_sub[-1] in out or any(c not in out for c in keep):
+        return None
+    xs_sq = xs[..., 0]                      # [*x_shape[:-1]]
+    order = [keep.index(c) for c in out if c in keep]
+    xs_t = jnp.transpose(xs_sq, order)
+    dims, it = [], iter(xs_t.shape)
+    for c in out:
+        dims.append(next(it) if c in keep else 1)
+    return xs_t.reshape(dims)
+
+
 def einsum_q(spec: str, x: jax.Array, w: Any) -> jax.Array:
-    """einsum where w may be stacked-quantized (MoE expert einsums)."""
+    """einsum where w may be stacked-quantized (MoE expert einsums).
+
+    When the weight carries ``abits``, the real int path runs: per-token
+    quantized activation codes enter the einsum and the per-token scale is
+    applied to the output — the same integer-compute-then-scale semantics
+    as the LUT-GEMV kernel, not fake-quant."""
     x, w = _apply_act_quant(x, w)
     if isinstance(w, (QTensor, StackedQTensor)):
-        w = dequantize_any(w).astype(x.dtype)
+        wd = dequantize_any(w).astype(x.dtype)
+        if (w.abits is not None
+                and jnp.issubdtype(x.dtype, jnp.floating)):
+            xq, xs = quantize_activations(x, w.abits)
+            xs_out = _einsum_scale_to_out(spec, x.shape, xs)
+            if xs_out is not None:
+                y = jnp.einsum(spec, xq.astype(jnp.float32),
+                               wd.astype(jnp.float32))
+                return (y * xs_out).astype(x.dtype)
+            # spec not output-mappable: fold the scale into the input
+            x = (xq.astype(jnp.float32) * xs).astype(x.dtype)
+        return jnp.einsum(spec, x, wd)
     return jnp.einsum(spec, x, w)

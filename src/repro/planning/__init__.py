@@ -10,6 +10,11 @@ from __future__ import annotations
 
 from typing import Any, Mapping, Optional
 
+from repro.planning.calibrate_cost import (
+    CalibrationResult,
+    machine_from_json,
+    run_calibration,
+)
 from repro.planning.cost import (
     Budgets,
     DecodeCostModel,
@@ -26,6 +31,7 @@ from repro.planning.tap import ActivationTap
 __all__ = [
     "ActivationTap",
     "Budgets",
+    "CalibrationResult",
     "DecodeCostModel",
     "PlanCost",
     "PlanRule",
@@ -35,9 +41,11 @@ __all__ = [
     "Slo",
     "as_plan",
     "calib_for_layer",
+    "machine_from_json",
     "plan_from_arg",
     "policy_units",
     "resolve_plan",
+    "run_calibration",
     "unquantized_bytes",
 ]
 

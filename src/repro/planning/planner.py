@@ -80,7 +80,15 @@ class Planner:
             group_size=self.plan.group_size or 128,
             min_size=self.plan.min_size or 65536,
         )
-        self.cost = cost or DecodeCostModel(prt=_solver_prt(self.plan.prt))
+        if cost is None:
+            prt = _solver_prt(self.plan.prt)
+            if self.plan.calibration is not None:
+                from repro.planning.calibrate_cost import machine_from_json
+
+                cost = DecodeCostModel(machine=machine_from_json(self.plan.calibration), prt=prt)
+            else:
+                cost = DecodeCostModel(prt=prt)
+        self.cost = cost
         self._tokens = tokens
         self._scores = scores
         self._act_scores = act_scores

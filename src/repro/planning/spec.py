@@ -132,6 +132,11 @@ class PlanSpec:
     # solved allocation (None until a Planner ran)
     weights_per_unit: Optional[Mapping[str, Any]] = None
     acts_per_unit: Optional[Mapping[str, Any]] = None
+    # measured-hardware provenance: fitted cost-model constants from
+    # ``planning.calibrate_cost`` (``CalibrationResult.provenance()``).
+    # When present, Planner budgets against the fitted machine, and the
+    # saved plan records exactly which hardware it was priced for.
+    calibration: Optional[Mapping[str, Any]] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -298,6 +303,8 @@ class PlanSpec:
             out["weights_per_unit"] = _bits_to_json(self.weights_per_unit)
         if self.acts_per_unit is not None:
             out["acts_per_unit"] = _bits_to_json(self.acts_per_unit)
+        if self.calibration is not None:
+            out["calibration"] = dict(self.calibration)
         return out
 
     @staticmethod
@@ -310,6 +317,7 @@ class PlanSpec:
             raise ValueError(f"plan version {version} is newer than {PLAN_VERSION}")
         wpu = spec.get("weights_per_unit")
         apu = spec.get("acts_per_unit")
+        cal = spec.get("calibration")
         return PlanSpec(
             mode=spec.get("mode", "uniform"),
             weight_bits=(
@@ -330,6 +338,7 @@ class PlanSpec:
             min_size=(int(spec["min_size"]) if spec.get("min_size") is not None else None),
             weights_per_unit=(_bits_from_json(wpu) if wpu is not None else None),
             acts_per_unit=(_bits_from_json(apu) if apu is not None else None),
+            calibration=(dict(cal) if cal is not None else None),
         )
 
     def save(self, path: str) -> None:

@@ -510,6 +510,11 @@ class Engine:
                               if self.plan is not None else None),
                 "plan_mode": (self.plan.mode
                               if self.plan is not None else None),
+                # whether the served plan was priced against fitted
+                # (measured-hardware) cost-model constants
+                "plan_calibrated": bool(self.plan is not None
+                                        and self.plan.calibration
+                                        is not None),
                 "replan_count": self.replan_count,
                 "prt_hit_rate": self.prt_hit_rate,
                 "tapped_rows": (self.tap.rows_seen

@@ -1,0 +1,133 @@
+"""Measured-roofline cost-model calibration.
+
+The fit must recover known machine constants from synthetic timings (the
+design matrix matches ``lut_gemv_cycles`` exactly), the artifact and the
+``PlanSpec.calibration`` provenance must round-trip, and a Planner handed
+a calibrated plan must price against the fitted machine.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.models.sail_linear import QuantPolicy
+from repro.planning import PlanSpec, Planner
+from repro.planning.calibrate_cost import (DEFAULT_ABITS, DEFAULT_NBW,
+                                           DEFAULT_WBITS, CalibrationResult,
+                                           FITTED_FIELDS, fit_constants,
+                                           machine_from_json)
+
+B, K, N = 8, 512, 256
+
+
+def _synth_points(machine):
+    """Exact model-generated timings over the calibration grid."""
+    pts = []
+    for wb in DEFAULT_WBITS:
+        for ab in DEFAULT_ABITS:
+            for nbw in DEFAULT_NBW:
+                cyc = cm.lut_gemv_cycles(machine, B, K, N, nbw, wb, ab,
+                                         threads=1)
+                pts.append(dict(wbits=wb, abits=ab, nbw=nbw,
+                                t_s=cyc / machine.freq_hz))
+    return pts
+
+
+def test_fit_recovers_known_constants():
+    true = dataclasses.replace(
+        cm.SailMachine(), lookup_base_cycles=500.0,
+        lookup_per_bit_cycles=12.0, rebuild_ctrl_cycles=4000.0,
+        build_overhead=3.0)
+    got = fit_constants(_synth_points(true), B, K, N)
+    for field in ("lookup_base_cycles", "lookup_per_bit_cycles",
+                  "rebuild_ctrl_cycles", "build_overhead"):
+        want = getattr(true, field)
+        assert got[field] == pytest.approx(want, rel=1e-6), field
+
+
+def test_fit_is_nonnegative_on_noisy_data():
+    rng = np.random.default_rng(0)
+    pts = _synth_points(cm.SailMachine())
+    for p in pts:
+        p["t_s"] *= float(rng.uniform(0.5, 2.0))
+    got = fit_constants(pts, B, K, N)
+    assert all(v >= 0.0 for v in got.values())
+
+
+def test_fitted_machine_reprices_grid_exactly():
+    true = dataclasses.replace(cm.SailMachine(), build_overhead=2.5,
+                               rebuild_ctrl_cycles=7000.0)
+    pts = _synth_points(true)
+    fitted = dataclasses.replace(cm.SailMachine(),
+                                 **fit_constants(pts, B, K, N))
+    for p in pts:
+        modeled = cm.lut_gemv_cycles(fitted, B, K, N, p["nbw"], p["wbits"],
+                                     p["abits"], threads=1)
+        measured = p["t_s"] * true.freq_hz
+        assert modeled == pytest.approx(measured, rel=1e-6)
+
+
+def _fake_result():
+    return CalibrationResult(
+        machine_overrides={"lookup_base_cycles": 777.0, "dram_bw": 5e10,
+                           "dram_efficiency": 1.0},
+        points=(dict(wbits=4, abits=8, nbw=2, t_s=1e-4,
+                     measured_cycles=3e5, modeled_cycles=2.9e5,
+                     rel_err=0.033),),
+        shape=(B, K, N), backend="cpu",
+        max_rel_err=0.033, mean_rel_err=0.033, dram_bw_measured=5e10)
+
+
+def test_calibration_result_roundtrip(tmp_path):
+    res = _fake_result()
+    path = str(tmp_path / "calib.json")
+    res.save(path)
+    back = CalibrationResult.load(path)
+    assert back == res
+    m = back.machine()
+    assert m.lookup_base_cycles == 777.0 and m.dram_bw == 5e10
+    assert m.rebuild_ctrl_cycles == cm.SailMachine().rebuild_ctrl_cycles
+
+
+def test_machine_from_json_ignores_unknown_fields():
+    m = machine_from_json({"machine_overrides": {
+        "lookup_base_cycles": 111.0, "freq_hz": 1.0, "bogus": 9.0}})
+    assert m.lookup_base_cycles == 111.0
+    assert m.freq_hz == cm.SailMachine().freq_hz  # structural, not fitted
+    assert set(FITTED_FIELDS) >= {"dram_bw", "build_overhead"}
+
+
+def test_planspec_carries_calibration_provenance():
+    prov = _fake_result().provenance()
+    plan = PlanSpec(mode="auto", weight_bits=4, act_bits=8,
+                    calibration=prov)
+    back = PlanSpec.from_json(json.loads(json.dumps(plan.to_json())))
+    assert back.calibration == prov
+    bare = PlanSpec(mode="auto", weight_bits=4, act_bits=8)
+    assert "calibration" not in bare.to_json()
+    assert plan.spec_hash != bare.spec_hash
+
+
+def test_planner_prices_against_fitted_machine():
+    cfg = ModelConfig(name="tiny", family="dense", vocab=64, d_model=32,
+                      n_layers=2, n_heads=4, n_kv=2, d_ff=64, act="swiglu",
+                      attn_chunk=16, max_seq=128)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    plan = PlanSpec(mode="auto", weight_bits=4, act_bits=8,
+                    calibration=_fake_result().provenance())
+    planner = Planner(params, cfg, plan,
+                      base=QuantPolicy(bits=4, group_size=32, min_size=1024))
+    m = planner.cost.machine
+    assert m.lookup_base_cycles == 777.0
+    assert m.dram_bw == 5e10 and m.dram_efficiency == 1.0
+    # an uncalibrated plan keeps the paper machine
+    bare = Planner(params, cfg,
+                   PlanSpec(mode="auto", weight_bits=4, act_bits=8),
+                   base=QuantPolicy(bits=4, group_size=32, min_size=1024))
+    assert bare.cost.machine.lookup_base_cycles == \
+        cm.SailMachine().lookup_base_cycles

@@ -17,7 +17,7 @@ def test_pack_unpack_exact(bits):
     assert (np.asarray(out) == codes).all()
 
 
-@pytest.mark.parametrize("bits", quant.SUPPORTED_BITS)
+@pytest.mark.parametrize("bits", quant.KERNEL_BITS)
 @pytest.mark.parametrize("group", [32, 64])
 def test_pack_grouped_exact(bits, group):
     rng = np.random.default_rng(bits * 100 + group)
@@ -57,6 +57,43 @@ def test_kv_quant_roundtrip():
     xd = quant.dequantize_kv(codes, scale)
     assert codes.dtype == jnp.int8
     assert float(jnp.abs(xd - x).max()) < float(jnp.abs(x).max()) / 64
+
+
+@pytest.mark.parametrize("group", [32, 64, 128, 256])
+def test_packed_bytes_strictly_monotone_in_bits(group):
+    """Regression: the value-aligned layout collapsed 3->4 and 5->6 bits
+    to identical group sizes at group_size=32; the bit-contiguous layout
+    must pay for every bit at every supported group size."""
+    from repro.core.cost_model import qtensor_bytes
+    k, n = group * 4, 16
+    words = [quant.words_per_group(b, group) for b in quant.SUPPORTED_BITS]
+    assert words == sorted(set(words)), (group, words)
+    sizes = [qtensor_bytes(k, n, b, group) for b in quant.SUPPORTED_BITS]
+    assert all(a < b for a, b in zip(sizes, sizes[1:])), (group, sizes)
+    # the packed arrays themselves ladder identically
+    w = jax.random.normal(jax.random.PRNGKey(group), (k, n))
+    packed = [quant.quantize(w, b, group).packed.size
+              for b in quant.SUPPORTED_BITS]
+    assert all(a < b for a, b in zip(packed, packed[1:])), (group, packed)
+
+
+def test_words_per_group_is_bit_exact_capacity():
+    for b in quant.KERNEL_BITS:
+        for g in (32, 64, 128, 256):
+            assert quant.words_per_group(b, g) == -(-(b * g) // 32)
+
+
+def test_one_bit_sign_quantize():
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 8))
+    qt = quant.quantize(w, 1, group_size=32)
+    wd = np.asarray(quant.dequantize(qt))
+    ww = np.asarray(w)
+    # sign codebook [-1, 1]: reconstruction is sign(w) * group absmax
+    absmax = np.abs(ww).reshape(2, 32, 8).max(axis=1, keepdims=True)
+    want = (np.sign(ww).reshape(2, 32, 8) * absmax).reshape(64, 8)
+    mask = np.abs(ww) > 1e-6  # ties at 0 may round either way
+    np.testing.assert_allclose(wd[mask.reshape(64, 8)],
+                               want[mask.reshape(64, 8)], rtol=1e-6)
 
 
 @settings(max_examples=25, deadline=None)
