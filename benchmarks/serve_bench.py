@@ -1,60 +1,254 @@
-"""Serving benchmark: continuous batching vs run-to-completion A/B.
+"""Serving benchmark: A/B scheduling comparison + trace-driven replay.
 
-Replays the same staggered-arrival workload through both scheduling
-modes of ``repro.serving.engine.Engine`` and reports tokens/s, model
-iterations (prefill + decode), mean/p99 request latency, and mean
-time-to-first-token.  Arrivals are simulated at iteration granularity:
-request i is submitted once the engine has run ``arrival[i]`` iterations
-(wall-clock-free, so the comparison is deterministic and runs on CPU).
+Two entry points over the same trace machinery
+(``repro.serving.workload``):
+
+  * default — replay one workload through both scheduling modes of
+    ``repro.serving.engine.Engine`` (continuous batching vs
+    run-to-completion) and report tokens/s, model iterations, mean/p99
+    request latency, and mean time-to-first-token;
+  * ``--replay`` — replay the identical trace under several precision
+    plans (``--plan`` is repeatable, ``--slo-solve`` appends an
+    SLO-solved plan) and emit a modeled-vs-measured tokens/s error
+    report, optionally with the autonomous SLO controller attached
+    (``--controller`` / ``--slo-frac``) — the CI ``trace-replay-gate``
+    runs this mode with ``--max-rel-err`` and the controller-action
+    assertions (``--expect-sheds`` / ``--expect-no-replan``).
+
+Arrivals are simulated at iteration granularity: request i is submitted
+once the engine has run ``arrival_iteration`` iterations (wall-clock
+free, so a trace replays deterministically on any host).  Traces are
+seeded and JSON-serializable: ``--save-trace`` writes one, ``--trace``
+replays a saved file bit-identically.
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py --requests 12 \
-          --max-new 24 --arrival-gap 3
+          --max-new 24 --arrival-gap 3 --arrival poisson --seed 7
+      PYTHONPATH=src python benchmarks/serve_bench.py --replay \
+          --arrival bursty --plan uniform:4 --slo-solve 1.2 \
+          --controller --slo-frac 1.5 --json report.json
 """
+
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
+from typing import Any, Dict, List
 
 import jax
-import numpy as np
 
 import repro.configs as C
 from repro.models import lm
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.workload import ArrivalSpec, LengthDist, Trace, TraceSpec, generate
 
 
-def build_workload(cfg, n_requests: int, max_new: int, arrival_gap: int,
-                   seed: int = 0):
-    """(prompt, max_new, arrival_iteration) triples, FIFO by arrival."""
-    rng = np.random.default_rng(seed)
-    reqs = []
-    for i in range(n_requests):
-        plen = int(rng.integers(4, 14))
-        prompt = rng.integers(0, cfg.vocab, size=plen).tolist()
-        new = int(rng.integers(max(1, max_new // 2), max_new + 1))
-        reqs.append((prompt, new, i * arrival_gap))
-    return reqs
+def build_workload(
+    cfg,
+    n_requests: int,
+    max_new: int,
+    arrival_gap: float,
+    seed: int = 0,
+    arrival: str = "fixed",
+    burst: int = 4,
+) -> Trace:
+    """The benchmark's workload as a :class:`Trace` — fully reproducible
+    from ``(seed, spec)``, with ``arrival`` naming one of the generator's
+    processes (fixed/poisson/bursty/diurnal) at mean gap ``arrival_gap``."""
+    spec = TraceSpec(
+        seed=seed,
+        n_requests=n_requests,
+        vocab=cfg.vocab,
+        prompt=LengthDist(kind="uniform", low=4, high=13),
+        output=LengthDist(kind="uniform", low=max(1, max_new // 2), high=max_new),
+        arrival=ArrivalSpec(process=arrival, gap=arrival_gap, burst=burst),
+    )
+    return generate(spec)
 
 
-def run_mode(params, cfg, ecfg: EngineConfig, workload):
+def run_trace(params, cfg, ecfg: EngineConfig, trace: Trace) -> Dict[str, Any]:
+    """Drive one engine through the trace (arrivals in engine
+    iterations) and return its stats + wall-clock throughput."""
     eng = Engine(params, cfg, ecfg)
-    pending = list(workload)
+    pending = sorted(trace.requests, key=lambda r: r.arrival_iteration)
+    i = 0
     t0 = time.time()
-    # drive the engine one iteration at a time, injecting arrivals
-    while pending or not eng.sched.idle():
-        while pending and pending[0][2] <= eng.iterations:
-            prompt, new, _ = pending.pop(0)
-            eng.submit(prompt, max_new_tokens=new)
-        if not eng.step() and pending:
+    while i < len(pending) or not eng.sched.idle():
+        while i < len(pending) and pending[i].arrival_iteration <= eng.iterations:
+            eng.submit(list(pending[i].prompt), max_new_tokens=pending[i].max_new_tokens)
+            i += 1
+        if not eng.step() and i < len(pending):
             # engine drained before the next arrival: jump to it
-            prompt, new, _ = pending.pop(0)
-            eng.submit(prompt, max_new_tokens=new)
+            eng.submit(list(pending[i].prompt), max_new_tokens=pending[i].max_new_tokens)
+            i += 1
     wall = time.time() - t0
     st = eng.stats()
     st["wall_s"] = wall
     st["tok_per_s"] = st["generated_tokens"] / max(wall, 1e-9)
+    st["completion_tokens"] = {str(u): c.tokens for u, c in sorted(eng.completions.items())}
     return st
+
+
+# --- replay mode ----------------------------------------------------------
+
+
+def _modeled_tps(params, cfg, policy, spec, batch: int) -> float:
+    """Modeled decode tokens/s of a resolved plan at ``batch`` occupancy
+    (the engine's ``planned_tps`` pricing, computed without building an
+    engine — no quantization pass needed)."""
+    from repro import planning
+
+    units = planning.policy_units(params, policy)
+    fixed = planning.unquantized_bytes(params, policy)
+    kw: Dict[str, Any] = {"batch": batch, "prt": spec.prt, "nbw": spec.nbw}
+    if spec.calibration is not None:
+        kw["machine"] = planning.machine_from_json(spec.calibration)
+    cost = planning.DecodeCostModel(**kw)
+    secs = cost.iteration_seconds(
+        cost.cycles(units), cost.qbytes(units, policy.group_size) + fixed
+    )
+    return batch / max(secs, 1e-30)
+
+
+def _resolve_plans(args, params, cfg) -> List[Dict[str, Any]]:
+    """CLI plan args -> [{label, spec, policy, modeled_tps}], resolving
+    each once (auto plans run the Planner here, not per engine build)."""
+    from repro import planning
+    from repro.models.sail_linear import QuantPolicy
+
+    base = QuantPolicy(bits=args.ql, group_size=32, min_size=1024)
+    out: List[Dict[str, Any]] = []
+    for arg in args.plan or ["uniform:%d" % args.ql]:
+        plan = planning.plan_from_arg(arg)
+        result = planning.resolve_plan(plan, params, cfg, base=base)
+        out.append(
+            {
+                "label": arg,
+                "spec": result.spec,
+                "policy": result.policy,
+                "modeled_tps": _modeled_tps(params, cfg, result.policy, result.spec, args.batch),
+            }
+        )
+    if args.slo_solve is not None:
+        # SLO-solved plan: target quoted against the baseline plan's own
+        # modeled capacity, so the solve is self-referencing (no
+        # hardcoded tokens/s that would rot with the cost model)
+        target = args.slo_solve * out[0]["modeled_tps"]
+        slo = planning.Slo(target, batch=args.batch)
+        plan = planning.PlanSpec(
+            mode="auto", weight_bits=args.ql, act_bits=8, prt="measured", quant_kv=True
+        )
+        result = planning.resolve_plan(plan, params, cfg, base=base, slo=slo)
+        out.append(
+            {
+                "label": f"slo-solve:{args.slo_solve:g}x",
+                "spec": result.spec,
+                "policy": result.policy,
+                "modeled_tps": _modeled_tps(params, cfg, result.policy, result.spec, args.batch),
+            }
+        )
+    return out
+
+
+def _replay(args, params, cfg, trace: Trace) -> Dict[str, Any]:
+    """Replay the trace under every plan; fit one measured/modeled scale
+    across plans (geometric mean — the host is not the modeled SAIL
+    machine) and report each plan's residual relative error."""
+    plans = _resolve_plans(args, params, cfg)
+    entries: List[Dict[str, Any]] = []
+    for p in plans:
+        slo = args.slo_frac * p["modeled_tps"] if args.slo_frac is not None else None
+        ecfg = EngineConfig(
+            batch_size=args.batch,
+            cache_len=args.cache_len,
+            quantize=True,
+            ql=args.ql,
+            group_size=32,
+            quant_kv=True,
+            mode="continuous",
+            plan=p["spec"],
+            slo=slo,
+            controller=args.controller or None,
+            tap_capacity=args.tap if args.controller else 0,
+            prefill_budget=args.prefill_budget,
+        )
+        st = run_trace(params, cfg, ecfg, trace)
+        tokens = st.pop("completion_tokens")
+        if args.verify_determinism:
+            st2 = run_trace(params, cfg, ecfg, trace)
+            if st2.pop("completion_tokens") != tokens:
+                raise SystemExit(f"FAIL: plan {p['label']} replay was not token-identical")
+        entries.append(
+            {
+                "plan": p["label"],
+                "plan_hash": st["plan_hash"],
+                "plan_mode": st["plan_mode"],
+                "slo_tps": slo,
+                # occupancy-matched: each iteration priced at its true
+                # occupancy, so controller caps don't read as model error
+                "modeled_tps": st["modeled_run_tps"] or st["planned_tps"],
+                "planned_tps": st["planned_tps"],
+                "measured_tps": st["measured_tps"],
+                "wall_s": st["wall_s"],
+                "generated_tokens": st["generated_tokens"],
+                "requests": st["requests"],
+                "decode_iterations": st["decode_iterations"],
+                "replan_count": st["replan_count"],
+                "controller": st["controller"],
+            }
+        )
+    ratios = [e["measured_tps"] / e["modeled_tps"] for e in entries]
+    scale = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    for e, r in zip(entries, ratios):
+        e["measured_over_modeled"] = r
+        e["rel_err"] = abs(r / scale - 1.0)
+    return {
+        "trace": {
+            "hash": trace.trace_hash,
+            "requests": len(trace.requests),
+            "prompt_tokens": trace.total_prompt_tokens,
+            "new_tokens": trace.total_new_tokens,
+            "spec": trace.spec.to_json(),
+        },
+        "scale": scale,
+        "max_rel_err": max(e["rel_err"] for e in entries),
+        "bound": args.max_rel_err,
+        "slo_frac": args.slo_frac,
+        "plans": entries,
+    }
+
+
+def _gate(args, report: Dict[str, Any]) -> None:
+    """CI assertions: modeled-vs-measured error bound + controller
+    behavior (sheds under SLO pressure, no replans on steady traffic)."""
+    failures: List[str] = []
+    if args.max_rel_err is not None and report["max_rel_err"] > args.max_rel_err:
+        failures.append(
+            f"modeled-vs-measured rel err {report['max_rel_err']:.3f} "
+            f"exceeds bound {args.max_rel_err:.3f}"
+        )
+    if args.expect_sheds:
+        acted = any(
+            e["controller"] is not None
+            and (e["controller"]["shed"] > 0 or e["controller"]["shrink"] > 0)
+            for e in report["plans"]
+        )
+        if not acted:
+            failures.append("expected >= 1 shed/shrink under SLO pressure, controller never acted")
+    if args.expect_no_replan:
+        for e in report["plans"]:
+            c = e["controller"]
+            if c is not None and (c["replan"] > 0 or c["resolve"] > 0):
+                failures.append(
+                    f"plan {e['plan']}: {c['replan']} replans / {c['resolve']} "
+                    "resolves on a trace that expected none"
+                )
+    if failures:
+        raise SystemExit("FAIL: " + "; ".join(failures))
+
+
+# --- CLI ------------------------------------------------------------------
 
 
 def main():
@@ -64,64 +258,191 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--arrival-gap", type=int, default=3,
-                    help="iterations between request arrivals")
+    ap.add_argument("--seed", type=int, default=0, help="trace generator seed")
+    ap.add_argument(
+        "--arrival",
+        default="fixed",
+        choices=["fixed", "poisson", "bursty", "diurnal"],
+        help="arrival process (mean gap --arrival-gap iterations)",
+    )
+    ap.add_argument(
+        "--arrival-gap",
+        type=float,
+        default=3,
+        help="mean iterations between request arrivals",
+    )
+    ap.add_argument("--burst", type=int, default=4, help="bursty: arrivals per burst")
     ap.add_argument("--prefill-budget", type=int, default=64)
     ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--plan", default=None,
-                    help="precision plan (grammar string or plan.json "
-                         "path) served in both modes")
-    ap.add_argument("--json", default=None,
-                    help="write per-mode stats (incl. plan provenance: "
-                         "plan_hash/replan_count/prt_hit_rate) here")
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="replay this saved trace.json instead of generating one",
+    )
+    ap.add_argument("--save-trace", default=None, metavar="PATH", help="write the trace JSON here")
+    ap.add_argument(
+        "--plan",
+        action="append",
+        default=None,
+        help="precision plan (grammar string or plan.json path); "
+        "repeatable in --replay mode, single-valued otherwise",
+    )
+    ap.add_argument("--json", default=None, help="write the stats/report JSON here")
+    # replay mode
+    ap.add_argument(
+        "--replay",
+        action="store_true",
+        help="replay the trace under each --plan and report modeled-vs-measured error",
+    )
+    ap.add_argument(
+        "--slo-solve",
+        type=float,
+        default=None,
+        metavar="FRAC",
+        help="replay: append an SLO-solved plan targeting FRAC x the "
+        "baseline plan's modeled tokens/s",
+    )
+    ap.add_argument(
+        "--controller",
+        action="store_true",
+        help="replay: attach the autonomous SLO controller to each engine",
+    )
+    ap.add_argument(
+        "--slo-frac",
+        type=float,
+        default=None,
+        metavar="FRAC",
+        help="replay: serve each plan under an SLO of FRAC x its own "
+        "modeled tokens/s (FRAC > 1 forces shed/shrink pressure)",
+    )
+    ap.add_argument("--tap", type=int, default=64, help="replay: ActivationTap rows (controller)")
+    ap.add_argument(
+        "--max-rel-err",
+        type=float,
+        default=None,
+        help="gate: fail when any plan's scale-fitted modeled-vs-measured "
+        "relative error exceeds this",
+    )
+    ap.add_argument(
+        "--expect-sheds",
+        action="store_true",
+        help="gate: fail unless the controller shed/shrank at least once",
+    )
+    ap.add_argument(
+        "--expect-no-replan",
+        action="store_true",
+        help="gate: fail if the controller replanned/resolved",
+    )
+    ap.add_argument(
+        "--verify-determinism",
+        action="store_true",
+        help="replay each plan twice and require token-identical output",
+    )
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    workload = build_workload(cfg, args.requests, args.max_new,
-                              args.arrival_gap)
-    total_prompt = sum(len(w[0]) for w in workload)
-    print(f"{cfg.name}: {args.requests} staggered requests "
-          f"(gap {args.arrival_gap} iters, {total_prompt} prompt tokens), "
-          f"pool of {args.batch} slots, Q{args.ql} weights, int8 KV")
+    if args.trace is not None:
+        trace = Trace.load(args.trace)
+    else:
+        trace = build_workload(
+            cfg,
+            args.requests,
+            args.max_new,
+            args.arrival_gap,
+            seed=args.seed,
+            arrival=args.arrival,
+            burst=args.burst,
+        )
+    if args.save_trace:
+        trace.save(args.save_trace)
+        print(f"wrote {args.save_trace}")
+    print(
+        f"{cfg.name}: {len(trace.requests)} requests "
+        f"({trace.spec.arrival.process} arrivals, trace {trace.trace_hash}, "
+        f"{trace.total_prompt_tokens} prompt tokens, "
+        f"<= {trace.total_new_tokens} new), pool of {args.batch} slots"
+    )
 
+    if args.replay:
+        report = _replay(args, params, cfg, trace)
+        hdr = (
+            f"{'plan':<18} {'modeled':>12} {'measured':>10} {'ratio':>10} "
+            f"{'rel err':>8} {'shed':>5} {'replan':>7}"
+        )
+        print(hdr)
+        print("-" * len(hdr))
+        for e in report["plans"]:
+            c = e["controller"] or {}
+            print(
+                f"{e['plan']:<18} {e['modeled_tps']:>12.0f} "
+                f"{e['measured_tps']:>10.1f} {e['measured_over_modeled']:>10.2e} "
+                f"{e['rel_err']:>8.3f} {c.get('shed', 0):>5} "
+                f"{c.get('replan', 0) + c.get('resolve', 0):>7}"
+            )
+        print(
+            f"measured/modeled scale {report['scale']:.3e} (geomean), "
+            f"max residual rel err {report['max_rel_err']:.3f}"
+            + (f" (bound {args.max_rel_err})" if args.max_rel_err is not None else "")
+        )
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"wrote {args.json}")
+        _gate(args, report)
+        return
+
+    # --- default: continuous vs run-to-completion A/B ---------------------
     plan = None
-    if args.plan is not None:
+    if args.plan:
+        if len(args.plan) > 1:
+            raise SystemExit("multiple --plan values need --replay")
         # resolve once: an auto plan re-solved per mode would run the
         # whole sensitivity calibration twice for the identical answer
         from repro import planning
         from repro.models.sail_linear import QuantPolicy
-        plan = planning.plan_from_arg(args.plan)
+
+        plan = planning.plan_from_arg(args.plan[0])
         if not plan.solved:
             plan = planning.resolve_plan(
-                plan, params, cfg,
-                base=QuantPolicy(bits=args.ql, group_size=32,
-                                 min_size=1024)).spec
+                plan, params, cfg, base=QuantPolicy(bits=args.ql, group_size=32, min_size=1024)
+            ).spec
     results = {}
     for mode in ("batch", "continuous"):
-        ecfg = EngineConfig(batch_size=args.batch,
-                            cache_len=args.cache_len, quantize=True,
-                            ql=args.ql, group_size=32, quant_kv=True,
-                            mode=mode, plan=plan,
-                            prefill_budget=args.prefill_budget)
-        results[mode] = run_mode(params, cfg, ecfg, workload)
+        ecfg = EngineConfig(
+            batch_size=args.batch,
+            cache_len=args.cache_len,
+            quantize=True,
+            ql=args.ql,
+            group_size=32,
+            quant_kv=True,
+            mode=mode,
+            plan=plan,
+            prefill_budget=args.prefill_budget,
+        )
+        results[mode] = run_trace(params, cfg, ecfg, trace)
+        results[mode].pop("completion_tokens")
 
-    hdr = (f"{'mode':<12} {'iters':>6} {'tok/s':>8} {'mean lat':>9} "
-           f"{'p99 lat':>9} {'TTFT':>7}")
+    hdr = f"{'mode':<12} {'iters':>6} {'tok/s':>8} {'mean lat':>9} {'p99 lat':>9} {'TTFT':>7}"
     print(hdr)
     print("-" * len(hdr))
     for mode, st in results.items():
-        print(f"{mode:<12} {st['iterations']:>6} {st['tok_per_s']:>8.2f} "
-              f"{st['mean_latency_s']:>8.2f}s {st['p99_latency_s']:>8.2f}s "
-              f"{st['mean_ttft_s']:>6.2f}s")
+        print(
+            f"{mode:<12} {st['iterations']:>6} {st['tok_per_s']:>8.2f} "
+            f"{st['mean_latency_s']:>8.2f}s {st['p99_latency_s']:>8.2f}s "
+            f"{st['mean_ttft_s']:>6.2f}s"
+        )
     b, c = results["batch"], results["continuous"]
-    assert (c["generated_tokens"] == b["generated_tokens"]
-            and c["requests"] == b["requests"]), \
+    assert c["generated_tokens"] == b["generated_tokens"] and c["requests"] == b["requests"], (
         "modes served different workloads"
-    print(f"continuous vs run-to-completion: "
-          f"{b['iterations']}/{c['iterations']} = "
-          f"{b['iterations']/c['iterations']:.2f}x fewer model iterations, "
-          f"{c['tok_per_s']/max(b['tok_per_s'],1e-9):.2f}x tokens/s")
+    )
+    print(
+        f"continuous vs run-to-completion: "
+        f"{b['iterations']}/{c['iterations']} = "
+        f"{b['iterations'] / c['iterations']:.2f}x fewer model iterations, "
+        f"{c['tok_per_s'] / max(b['tok_per_s'], 1e-9):.2f}x tokens/s"
+    )
     print(f"plan: {c['plan_hash']} ({c['plan_mode']})")
     if args.json:
         with open(args.json, "w") as f:

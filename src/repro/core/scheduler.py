@@ -190,18 +190,22 @@ class IterationScheduler:
             self.free_slots = list(range(self.max_batch))
             self._slots_init = True
 
-    def schedule(self) -> List[Request]:
+    def schedule(self, max_active: Optional[int] = None) -> List[Request]:
         """Admit waiting requests into free slots; return the newly
         admitted ones (state PREFILL, ``slot`` assigned).
 
         FIFO in arrival order; total prompt tokens admitted per call are
         capped at ``prefill_budget`` (the first admitted request is
-        exempt so an over-budget prompt cannot starve).
+        exempt so an over-budget prompt cannot starve).  ``max_active``
+        caps total occupancy below the pool size — the SLO controller's
+        shrink/shed lever (deferred requests stay queued in FIFO order).
         """
         self._ensure_slots()
         admitted: List[Request] = []
         used = 0
         while self.waiting and self.free_slots:
+            if max_active is not None and len(self.running) >= max_active:
+                break
             nxt = self.waiting[0]
             if (admitted and self.prefill_budget is not None
                     and used + nxt.prompt_len > self.prefill_budget):

@@ -59,6 +59,20 @@ def main() -> None:
                     help="capture per-layer decode activations into an "
                          "ActivationTap of this capacity (enables online "
                          "PRT recalibration via Engine.replan)")
+    ap.add_argument("--controller", action="store_true",
+                    help="attach the autonomous SLO controller "
+                         "(repro.serving.control.SloController): sheds/"
+                         "shrinks occupancy against --slo and gates "
+                         "replans on measured-vs-modeled drift")
+    ap.add_argument("--deadband", type=float, default=None,
+                    help="controller: |anchored drift| tolerated without "
+                         "action (default 0.25)")
+    ap.add_argument("--cooldown", type=int, default=None,
+                    help="controller: decode iterations between actions "
+                         "(default 32)")
+    ap.add_argument("--check-every", type=int, default=None,
+                    help="controller: decode iterations between drift "
+                         "checks (default 8)")
     ap.add_argument("--bit-policy", default=None,
                     help="DEPRECATED alias for --plan (grammar strings "
                          "only)")
@@ -80,12 +94,19 @@ def main() -> None:
         raise SystemExit("use a decoder-only arch for the LM server")
     plan = plan_from_arg(args.plan) if args.plan is not None else None
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    controller = None
+    if args.controller:
+        knobs = {k: v for k, v in (("deadband", args.deadband),
+                                   ("cooldown", args.cooldown),
+                                   ("check_every", args.check_every))
+                 if v is not None}
+        controller = knobs or True
     eng = Engine(params, cfg, EngineConfig(
         batch_size=args.batch, cache_len=args.cache_len, quantize=True,
         ql=args.ql, group_size=min(128, cfg.d_model),
         quant_kv=not args.no_quant_kv, mode=args.mode,
         plan=plan, slo=args.slo, tap_capacity=args.tap,
-        bit_policy=args.bit_policy,
+        controller=controller, bit_policy=args.bit_policy,
         prefill_budget=args.prefill_budget))
     st = eng.stats()
     quant_desc = (f"mixed-precision plan {st['plan_hash']}"
@@ -120,6 +141,17 @@ def main() -> None:
           f"({st['prefill_iterations']} prefill / "
           f"{st['decode_iterations']} decode, "
           f"{st['prefill_tokens']} prompt tokens)")
+    if st["measured_tps"] is not None and st["planned_tps"]:
+        print(f"decode: measured {st['measured_tps']:.1f} tok/s vs "
+              f"modeled {st['planned_tps']:.0f} tok/s at the full pool "
+              f"(raw drift {st['drift']:+.3f} — absolute value is "
+              f"meaningful once the plan carries host calibration)")
+    if st["controller"] is not None:
+        c = st["controller"]
+        print(f"controller: batch cap {c['batch_cap']}, "
+              f"{c['checks']} drift checks, "
+              f"shed {c['shed']} / shrink {c['shrink']} / "
+              f"replan {c['replan']} / resolve {c['resolve']}")
     if args.tap and eng.tap is not None:   # taps attach in continuous mode
         print(f"tap: {st['tapped_rows']} activation rows captured across "
               f"{eng.tap.n_layers} layers (Engine.replan() recalibrates "

@@ -28,8 +28,19 @@ int8.  Precision comes from a ``repro.planning.PlanSpec``
 ``stats()["plan_hash"]``); with ``tap_capacity > 0`` an ``ActivationTap``
 captures per-layer decode inputs and ``Engine.replan()`` recalibrates
 measured PRT discounts from live traffic, hot-swapping the requantized
-weights under the running KV pool.  The engine is synchronous and
-deterministic; streaming consumers hook ``submit(..., on_token=...)``.
+weights under the running KV pool.
+
+The loop closes itself: ``EngineConfig.controller`` attaches a
+``repro.serving.control.SloController`` that runs inside ``step()`` —
+admissions are shed (deferred) and the decode batch shrunk to the
+largest occupancy at which the plan's modeled iteration time still
+meets the SLO, and ``replan()`` fires automatically when measured-vs-
+modeled tokens/s drift leaves the deadband (with hysteresis, escalating
+to a full re-solve only when the tapped PRT hit rate moved).  Every
+engine — controller or not — reports ``measured_tps`` / ``planned_tps``
+/ ``drift`` in ``stats()`` so a stale calibration is visible.  The
+engine is synchronous and deterministic; streaming consumers hook
+``submit(..., on_token=...)``.
 """
 from __future__ import annotations
 
@@ -77,6 +88,11 @@ class EngineConfig:
     # tap is attached; set True for tap-less hot-swapping, False to
     # reclaim the memory even with a tap (replan then raises).
     retain_raw: Optional[bool] = None
+    # autonomous SLO control loop: True (defaults), a knob dict, or a
+    # repro.serving.control.ControllerConfig.  The controller sheds /
+    # shrinks occupancy against the SLO and gates replans on measured-
+    # vs-modeled drift (continuous mode only).
+    controller: Any = None
     # DEPRECATED legacy surface (use ``plan``): None, QuantPolicy, policy
     # spec dict, or grammar string.
     bit_policy: Any = None
@@ -107,7 +123,20 @@ class Engine:
         self.replan_count = 0
         self.prt_hit_rate: Optional[float] = None
         self.tap: Optional[planning.ActivationTap] = None
+        self.controller = None
+        self.slo: Optional[planning.Slo] = None
         self._raw_params = None
+        # plan pricing state (units + fixed DRAM bytes captured while the
+        # raw tree is in hand; iteration-seconds memoized per occupancy)
+        self._plan_units = None
+        self._plan_fixed_bytes = 0
+        self._iter_cache: Dict[Any, float] = {}
+        # measured decode throughput (stats()["measured_tps"] / drift)
+        self.decode_seconds = 0.0
+        self._decode_tokens = 0
+        # modeled seconds of the SAME iterations at their true occupancy
+        # — the occupancy-matched reference side of stats()["drift"]
+        self.modeled_seconds = 0.0
         if (ecfg.bit_policy is not None or ecfg.plan is not None) \
                 and not ecfg.quantize:
             raise ValueError("a precision plan requires quantize=True")
@@ -144,6 +173,7 @@ class Engine:
                           else plan_obj.target_tps)
                 slo = (planning.Slo(target, batch=ecfg.batch_size)
                        if target is not None else None)
+                self.slo = slo
                 result = planning.resolve_plan(
                     plan_obj, params, cfg, base=base, slo=slo,
                     compute_cost=plan_obj.solved and slo is not None)
@@ -183,6 +213,12 @@ class Engine:
                 self.plan = planning.PlanSpec.from_policy(
                     policy, quant_kv=ecfg.quant_kv)
             self.quant_policy = policy
+            # price the plan while the raw tree is still in hand — the
+            # cost-model units and fixed DRAM bytes behind planned_tps()
+            # and the controller's occupancy cap
+            self._plan_units = planning.policy_units(params, policy)
+            self._plan_fixed_bytes = planning.unquantized_bytes(params,
+                                                               policy)
             retain = (ecfg.retain_raw if ecfg.retain_raw is not None
                       else self.tap is not None)
             if retain:
@@ -214,6 +250,23 @@ class Engine:
             self.cache = lm.init_cache(self.params, cfg, ecfg.batch_size,
                                        clen, ecfg.quant_kv)
             self._cur = np.zeros((ecfg.batch_size,), np.int32)
+        if ecfg.controller:
+            if ecfg.mode != "continuous":
+                warnings.warn(
+                    "controller is ignored in mode='batch' — the "
+                    "SloController hooks the continuous engine's "
+                    "iteration loop", UserWarning, stacklevel=2)
+            else:
+                from repro.serving.control import (ControllerConfig,
+                                                   SloController)
+                self.controller = SloController(
+                    ControllerConfig.coerce(ecfg.controller),
+                    slo=self.slo,
+                    iter_seconds=(self._modeled_iter_seconds
+                                  if self._plan_units is not None
+                                  else None),
+                    planned_tps=self.planned_tps(),
+                    plan_hit_rate=self.prt_hit_rate)
 
     # --- client API -------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int,
@@ -241,7 +294,15 @@ class Engine:
         if self.ecfg.mode != "continuous":
             self._serve_batch()
             return not self.sched.idle()
-        admitted = self.sched.schedule()
+        ctl = self.controller
+        cap = (ctl.batch_cap(self.ecfg.batch_size)
+               if ctl is not None and ctl.cfg.shed else None)
+        admitted = self.sched.schedule(max_active=cap)
+        if (cap is not None and self.sched.waiting and self.sched.free_slots
+                and self.sched.active >= cap):
+            # free slots exist but the SLO cap is binding: these
+            # admissions are shed (deferred in FIFO), not dropped
+            ctl.record_shed()
         if admitted:
             # group same-padded-length admissions into ONE prefill pass:
             # a K-request burst streams each layer's weights once, not K
@@ -274,6 +335,7 @@ class Engine:
                 mask[req.slot] = True
             capture = (self.tap is not None
                        and self.tap.should_capture(self.decode_iterations))
+            t0 = time.perf_counter()
             out = lm.decode_step(
                 self.params, jnp.asarray(self._cur[:, None]), self.cache,
                 self.cfg, quant_kv=self.ecfg.quant_kv,
@@ -287,10 +349,21 @@ class Engine:
             self.iterations += 1
             self.decode_iterations += 1
             nxt = self._sample(logits)
+            # _sample's np.asarray blocks on the device, so dt covers the
+            # whole iteration (incl. any tap-capture sync)
+            dt = time.perf_counter() - t0
+            self.decode_seconds += dt
+            self._decode_tokens += len(active)
+            exp = self._modeled_iter_seconds(len(active))
+            if exp is not None:
+                self.modeled_seconds += exp
             for req in active:
                 self._cur[req.slot] = nxt[req.slot]
                 self.events[req.uid].setdefault("first_decode_iteration",
                                                 self.iterations)
+            if ctl is not None and ctl.observe(len(active), dt,
+                                              self.decode_iterations):
+                self._controller_step()
         return not self.sched.idle()
 
     def run(self) -> List[Completion]:
@@ -409,6 +482,102 @@ class Engine:
                            group_size=self.ecfg.group_size,
                            min_size=self.ecfg.min_size)
 
+    # --- plan pricing / control loop --------------------------------------
+    def _plan_cost_model(self, batch: int):
+        """DecodeCostModel matching the served plan's knobs (fitted
+        machine when the plan carries calibration provenance)."""
+        from repro import planning
+        kw: Dict[str, Any] = {"batch": int(batch)}
+        if self.plan is not None:
+            kw["prt"] = self.plan.prt
+            kw["nbw"] = self.plan.nbw
+            if self.plan.calibration is not None:
+                kw["machine"] = planning.machine_from_json(
+                    self.plan.calibration)
+        return planning.DecodeCostModel(**kw)
+
+    def _modeled_iter_seconds(self, occupancy: int) -> Optional[float]:
+        """Modeled seconds of one masked decode iteration at the given
+        occupancy (memoized per plan; lookup cycles scale with batch, so
+        this is nondecreasing — the controller's feasibility curve)."""
+        if self._plan_units is None:
+            return None
+        key = (self.plan.spec_hash if self.plan is not None else None,
+               int(occupancy))
+        got = self._iter_cache.get(key)
+        if got is None:
+            cost = self._plan_cost_model(occupancy)
+            cycles = cost.cycles(self._plan_units)
+            total = (cost.qbytes(self._plan_units,
+                                 self.quant_policy.group_size)
+                     + self._plan_fixed_bytes)
+            got = cost.iteration_seconds(cycles, total)
+            self._iter_cache[key] = got
+        return got
+
+    def planned_tps(self, batch: Optional[int] = None) -> Optional[float]:
+        """Modeled decode tokens/s of the served plan at ``batch``
+        occupancy (default: the full pool) — the reference side of
+        ``stats()["drift"]``.  None when serving unquantized."""
+        b = self.ecfg.batch_size if batch is None else int(batch)
+        secs = self._modeled_iter_seconds(b)
+        return None if secs is None else b / max(secs, 1e-30)
+
+    def measured_tps(self) -> Optional[float]:
+        """Measured decode-phase tokens/s over the whole run (tokens
+        produced per wall second of masked decode iterations)."""
+        if self.decode_seconds <= 0 or self._decode_tokens == 0:
+            return None
+        return self._decode_tokens / self.decode_seconds
+
+    def modeled_run_tps(self) -> Optional[float]:
+        """Modeled tokens/s of the iterations actually run, each priced
+        at its true occupancy — the occupancy-matched counterpart of
+        :meth:`measured_tps` (``planned_tps`` prices the full pool)."""
+        if self.modeled_seconds <= 0 or self._decode_tokens == 0:
+            return None
+        return self._decode_tokens / self.modeled_seconds
+
+    def _tapped_hit_rate(self) -> Optional[float]:
+        """PRT hit rate of the tapped traffic at the served plan's
+        operating point (the escalation signal: compare against the rate
+        the plan was priced with)."""
+        if self.tap is None:
+            return None
+        calib = self.tap.calib()
+        if calib is None:
+            return None
+        from repro.core import cost_model as cm
+        from repro.core import pattern
+        merged = calib.get(None) if isinstance(calib, dict) else calib
+        wbits = (self.plan.weight_bits if self.plan is not None
+                 and self.plan.weight_bits is not None else self.ecfg.ql)
+        abits = (self.plan.act_bits if self.plan is not None
+                 and self.plan.act_bits is not None else 8)
+        nbw = self.plan.nbw if self.plan is not None else "auto"
+        if not isinstance(nbw, int):
+            k = int(merged.shape[-1])
+            nbw = cm.best_nbw_for_unit(k, k, wbits, abits,
+                                       batch=self.ecfg.batch_size)
+        return pattern.prt_hit_rate(nbw, abits, merged)
+
+    def _controller_step(self) -> None:
+        """Apply the drift loop's requested action: replan (re-price on
+        tapped traffic) or, when the tapped PRT hit rate moved enough to
+        change the allocation, escalate to a full re-solve.  Without a
+        tap (or raw weights) the action is recorded as skipped — the
+        drift stays visible in stats() but nothing can act on it."""
+        ctl = self.controller
+        it = self.decode_iterations
+        can = (self.tap is not None and self._raw_params is not None
+               and self.tap.rows_seen > 0)
+        if not can:
+            ctl.acted("skipped", it)
+            return
+        action = ctl.decide(self._tapped_hit_rate(), self.prt_hit_rate)
+        self.replan(resolve=(action == "resolve"))
+        ctl.acted(action, it)
+
     def apply_plan(self, plan, force_requantize: bool = False) -> None:
         """Hot-swap the engine onto a new (solved) plan mid-serve.
 
@@ -449,6 +618,23 @@ class Engine:
         self.replan_count += 1
         if hit is not None:
             self.prt_hit_rate = hit
+        # re-price: the swapped plan has its own units / feasibility
+        # curve, and the controller must re-anchor drift against it
+        from repro import planning
+        self._plan_units = planning.policy_units(self._raw_params, policy)
+        self._plan_fixed_bytes = planning.unquantized_bytes(
+            self._raw_params, policy)
+        self._iter_cache.clear()
+        if spec.target_tps is not None:
+            self.slo = planning.Slo(spec.target_tps,
+                                    batch=spec.slo_batch
+                                    or self.ecfg.batch_size)
+        if self.controller is not None:
+            self.controller.slo = self.slo
+            self.controller.plan_changed(
+                iter_seconds=self._modeled_iter_seconds,
+                planned_tps=self.planned_tps(),
+                plan_hit_rate=self.prt_hit_rate)
 
     def replan(self, planner=None, resolve: bool = False):
         """Online recalibration from live traffic (ROADMAP: "PRT hit
@@ -495,7 +681,25 @@ class Engine:
         lats = [c.latency_s for c in self.completions.values()]
         ttfts = [c.ttft_s for c in self.completions.values()]
         toks = sum(len(c.tokens) for c in self.completions.values())
+        measured = self.measured_tps()
+        planned = self.planned_tps()
+        modeled = self.modeled_run_tps()
+        # measured-vs-modeled decode tokens/s drift: the "is the
+        # calibration stale?" signal, reported with or without a
+        # controller.  Occupancy-matched (each iteration priced at its
+        # true occupancy) raw ratio — absolute value is only meaningful
+        # when the plan carries host calibration (plan_calibrated);
+        # the controller's internal drift is anchor-normalized.
+        ref = modeled if modeled else planned
+        drift = (measured / ref - 1.0
+                 if measured is not None and ref else None)
         return {"requests": len(self.completions),
+                "measured_tps": measured,
+                "planned_tps": planned,
+                "modeled_run_tps": modeled,
+                "drift": drift,
+                "controller": (self.controller.stats()
+                               if self.controller is not None else None),
                 "generated_tokens": toks,
                 "iterations": self.iterations,
                 "prefill_iterations": self.prefill_iterations,

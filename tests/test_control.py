@@ -1,0 +1,276 @@
+"""SloController state machine + its integration into Engine.step():
+hysteresis/deadband, shed/shrink flipping exactly at the modeled
+feasibility boundary, escalation-to-resolve only on PRT-delta movement,
+and trace-replay determinism of the controlled engine."""
+
+import warnings
+
+import jax
+import pytest
+
+import repro.configs as C
+from repro.models import lm
+from repro.planning import Slo
+from repro.serving.control import ControllerConfig, SloController
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.workload import ArrivalSpec, LengthDist, TraceSpec, generate
+
+# --- pure state-machine tests (no model) ----------------------------------
+
+
+def test_config_coerce_and_validation():
+    assert ControllerConfig.coerce(True) == ControllerConfig()
+    assert ControllerConfig.coerce({"deadband": 0.5}).deadband == 0.5
+    cfg = ControllerConfig(cooldown=0)
+    assert ControllerConfig.coerce(cfg) is cfg
+    with pytest.raises(TypeError):
+        ControllerConfig.coerce("yes")
+    with pytest.raises(ValueError):
+        ControllerConfig(check_every=0)
+    with pytest.raises(ValueError):
+        ControllerConfig(hysteresis=0)
+    with pytest.raises(ValueError):
+        ControllerConfig(deadband=-0.1)
+
+
+def make_ctl(**kw):
+    """Controller over a synthetic linear machine: t_iter(b) = b * 0.1s,
+    window of 1 so each observation is its own drift sample."""
+    defaults = dict(check_every=1, deadband=0.25, hysteresis=2, cooldown=0, window=1, warmup=0)
+    defaults.update(kw)
+    return SloController(
+        ControllerConfig(**defaults),
+        slo=Slo(20.0, batch=4),  # budget: 4/20 = 0.2 s/iteration
+        iter_seconds=lambda b: b * 0.1,
+        planned_tps=40.0,
+    )
+
+
+def test_drift_deadband_and_hysteresis():
+    ctl = make_ctl()
+    # first in-budget check only anchors (drift defined relative to it)
+    assert ctl.observe(1, 0.1, 1) is False
+    assert ctl.drift() == 0.0
+    # within the deadband: never an action, oob stays reset
+    assert ctl.observe(1, 0.11, 2) is False
+    assert abs(ctl.drift()) < 0.25
+    # one out-of-band check is not enough (hysteresis=2)...
+    assert ctl.observe(1, 0.2, 3) is False
+    # ...re-entering the band resets the consecutive count...
+    assert ctl.observe(1, 0.1, 4) is False
+    assert ctl.observe(1, 0.2, 5) is False
+    # ...two consecutive out-of-band checks finally act
+    assert ctl.observe(1, 0.2, 6) is True
+
+
+def test_drift_is_occupancy_normalized():
+    """Occupancy swings are not drift: halving the batch halves both the
+    measured and the modeled seconds, so the anchored ratio is unmoved."""
+    ctl = make_ctl()
+    assert ctl.observe(4, 0.4, 1) is False  # anchor at occupancy 4
+    assert ctl.observe(1, 0.1, 2) is False  # same machine, occupancy 1
+    assert ctl.drift() == pytest.approx(0.0, abs=1e-9)
+
+
+def test_cooldown_blocks_actions():
+    ctl = make_ctl(hysteresis=1, cooldown=10)
+    assert ctl.observe(1, 0.1, 1) is False  # anchor
+    assert ctl.observe(1, 0.2, 2) is True
+    ctl.acted("replan", 2)
+    # still drifting, but the cooldown has not elapsed — and the window
+    # was cleared, so a fresh out-of-band sample is needed anyway
+    assert ctl.observe(1, 0.2, 5) is False
+    assert ctl.observe(1, 0.2, 30) is True
+    assert ctl.actions["replan"] == 1
+
+
+def test_batch_cap_flips_at_feasibility_boundary():
+    """budget 0.2s, t_iter(b) = 0.1b: feasible through b=2, infeasible
+    from b=3 — the cap sits exactly on the meets_slo flip."""
+    ctl = make_ctl()
+    assert ctl.meets_slo_at(2) is True
+    assert ctl.meets_slo_at(3) is False
+    assert ctl.batch_cap(4) == 2
+    assert ctl.actions["shrink"] == 1  # tightened below the pool once
+    assert ctl.batch_cap(4) == 2  # cached: no double-count
+    assert ctl.actions["shrink"] == 1
+
+
+def test_batch_cap_unconstrained_without_slo():
+    ctl = SloController(ControllerConfig(), slo=None, iter_seconds=lambda b: b * 0.1)
+    assert ctl.batch_cap(4) == 4
+    assert ctl.meets_slo_at(4) is None
+    assert ctl.actions["shrink"] == 0
+
+
+def test_batch_cap_floors_at_min_batch():
+    ctl = SloController(
+        ControllerConfig(min_batch=2),
+        slo=Slo(100.0, batch=4),  # budget 0.04s: infeasible even at b=1
+        iter_seconds=lambda b: b * 0.1,
+    )
+    assert ctl.batch_cap(4) == 2
+
+
+def test_decide_escalates_only_on_prt_delta():
+    ctl = make_ctl(resolve_hit_delta=0.02)
+    ctl.plan_hit_rate = 0.50
+    assert ctl.decide(tapped_hit_rate=0.51) == "replan"  # within delta
+    assert ctl.decide(tapped_hit_rate=0.60) == "resolve"  # allocation moves
+    assert ctl.decide(tapped_hit_rate=None) == "replan"  # no signal
+    ctl.plan_hit_rate = None
+    assert ctl.decide(tapped_hit_rate=0.9) == "replan"  # no reference
+
+
+def test_acted_and_shed_bookkeeping():
+    ctl = make_ctl()
+    ctl.record_shed()
+    ctl.record_shed(2)
+    assert ctl.actions["shed"] == 3
+    with pytest.raises(ValueError, match="unknown action"):
+        ctl.acted("panic", 1)
+
+
+def test_plan_changed_reanchors():
+    ctl = make_ctl(hysteresis=1)
+    assert ctl.observe(1, 0.1, 1) is False
+    assert ctl.observe(1, 0.2, 2) is True
+    ctl.plan_changed(iter_seconds=lambda b: b * 0.2, planned_tps=20.0)
+    assert ctl.drift() is None
+    # the next check anchors against the NEW model instead of acting
+    assert ctl.observe(1, 0.2, 3) is False
+    assert ctl.drift() == 0.0
+
+
+# --- engine integration ---------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = C.get_smoke("tinymistral_248m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def bursty_trace(seed=7, n=10):
+    return generate(
+        TraceSpec(
+            seed=seed,
+            n_requests=n,
+            vocab=255,
+            prompt=LengthDist("uniform", low=4, high=12),
+            output=LengthDist("constant", low=6, high=6),
+            arrival=ArrivalSpec("bursty", gap=2.0, burst=5),
+        )
+    )
+
+
+def drive(params, cfg, ecfg, trace):
+    eng = Engine(params, cfg, ecfg)
+    pending = sorted(trace.requests, key=lambda r: r.arrival_iteration)
+    i = 0
+    while i < len(pending) or not eng.sched.idle():
+        while i < len(pending) and pending[i].arrival_iteration <= eng.iterations:
+            eng.submit(list(pending[i].prompt), pending[i].max_new_tokens)
+            i += 1
+        if not eng.step() and i < len(pending):
+            eng.submit(list(pending[i].prompt), pending[i].max_new_tokens)
+            i += 1
+    return eng
+
+
+def make_ecfg(**kw):
+    return EngineConfig(batch_size=4, cache_len=64, quantize=True, ql=4, group_size=32, **kw)
+
+
+def test_stats_drift_without_controller(tiny):
+    """The staleness signal is reported on a plain engine run."""
+    cfg, params = tiny
+    eng = Engine(params, cfg, make_ecfg(plan="uniform:4"))
+    eng.submit([1, 2, 3], max_new_tokens=4)
+    eng.run()
+    st = eng.stats()
+    assert st["controller"] is None
+    assert st["measured_tps"] is not None and st["measured_tps"] > 0
+    assert st["planned_tps"] is not None and st["planned_tps"] > 0
+    assert st["modeled_run_tps"] is not None
+    assert st["drift"] is not None
+
+
+def test_controller_sheds_under_infeasible_slo(tiny):
+    """An SLO above the served plan's own modeled capacity makes the
+    full pool infeasible: the controller must shrink the cap and shed
+    the burst's excess admissions (deferred, not dropped)."""
+    cfg, params = tiny
+    probe = Engine(params, cfg, make_ecfg(plan="uniform:4"))
+    planned = probe.planned_tps()
+    trace = bursty_trace()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # engine warns: SLO not met
+        eng = drive(params, cfg, make_ecfg(plan="uniform:4", slo=planned * 1.5, controller=True),
+                    trace)
+    st = eng.stats()
+    assert st["requests"] == len(trace.requests)  # sheds defer, never drop
+    c = st["controller"]
+    assert c["batch_cap"] < 4
+    assert c["shrink"] >= 1
+    assert c["shed"] >= 1
+    ctl = eng.controller
+    assert ctl.meets_slo_at(c["batch_cap"]) is True
+    assert ctl.meets_slo_at(c["batch_cap"] + 1) is False
+
+
+def test_controller_quiet_when_slo_feasible(tiny):
+    """A comfortably feasible SLO must produce no occupancy action and,
+    on steady traffic, no replans (drift stays inside the deadband)."""
+    cfg, params = tiny
+    probe = Engine(params, cfg, make_ecfg(plan="uniform:4"))
+    planned = probe.planned_tps()
+    trace = generate(
+        TraceSpec(
+            seed=11,
+            n_requests=6,
+            vocab=255,
+            prompt=LengthDist("constant", low=6, high=6),
+            output=LengthDist("constant", low=8, high=8),
+            arrival=ArrivalSpec("fixed", gap=3.0),
+        )
+    )
+    eng = drive(params, cfg, make_ecfg(plan="uniform:4", slo=planned * 0.5, controller=True,
+                                       tap_capacity=32),
+                trace)
+    c = eng.stats()["controller"]
+    assert c["batch_cap"] == 4
+    assert c["shed"] == 0 and c["shrink"] == 0
+    assert c["replan"] == 0 and c["resolve"] == 0
+
+
+def test_controller_replans_on_forced_drift(tiny):
+    """With a zero deadband every post-anchor check is out-of-band, so
+    the drift loop must fire a replan through the tap."""
+    cfg, params = tiny
+    knobs = {"deadband": 0.0, "check_every": 1, "hysteresis": 1, "cooldown": 0, "warmup": 1}
+    eng = drive(params, cfg, make_ecfg(plan="uniform:4", controller=knobs, tap_capacity=32),
+                bursty_trace(n=6))
+    c = eng.stats()["controller"]
+    assert c["replan"] + c["resolve"] >= 1
+    assert eng.replan_count >= 1
+    assert eng.stats()["plan_hash"] is not None
+
+
+def test_controlled_replay_is_deterministic(tiny):
+    """Same trace + same engine config => token-identical output, even
+    with the controller acting (its decisions are iteration-clocked,
+    not wall-clocked... except drift, which only gates replans that
+    re-price without changing tokens)."""
+    cfg, params = tiny
+    trace = bursty_trace(seed=3, n=8)
+    outs = []
+    for _ in range(2):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            eng = drive(params, cfg, make_ecfg(plan="uniform:4", controller=True,
+                                               tap_capacity=32),
+                        trace)
+        outs.append({u: tuple(cc.tokens) for u, cc in eng.completions.items()})
+    assert outs[0] == outs[1]
