@@ -15,6 +15,12 @@ Two entry points over the same trace machinery
     runs this mode with ``--max-rel-err`` and the controller-action
     assertions (``--expect-sheds`` / ``--expect-no-replan``).
 
+  * ``--paged-gate`` — equal-KV-memory A/B of the fixed-slot pool vs
+    the paged block pool on a prefix-heavy trace (``--prefix-len``):
+    the paged engine must sustain strictly higher peak concurrency with
+    per-request token-identical completions — the CI gate for the
+    block-pool refactor.
+
 Arrivals are simulated at iteration granularity: request i is submitted
 once the engine has run ``arrival_iteration`` iterations (wall-clock
 free, so a trace replays deterministically on any host).  Traces are
@@ -52,17 +58,27 @@ def build_workload(
     seed: int = 0,
     arrival: str = "fixed",
     burst: int = 4,
+    prefix_len: int = 0,
+    prompt_len: int = None,
 ) -> Trace:
     """The benchmark's workload as a :class:`Trace` — fully reproducible
     from ``(seed, spec)``, with ``arrival`` naming one of the generator's
-    processes (fixed/poisson/bursty/diurnal) at mean gap ``arrival_gap``."""
+    processes (fixed/poisson/bursty/diurnal) at mean gap ``arrival_gap``.
+    ``prefix_len > 0`` prepends one shared system prompt to every request
+    (the paged pool's prefix-sharing regime); ``prompt_len`` pins the
+    per-request suffix to a constant length."""
+    if prompt_len is not None:
+        prompt = LengthDist(kind="constant", low=prompt_len, high=prompt_len)
+    else:
+        prompt = LengthDist(kind="uniform", low=4, high=13)
     spec = TraceSpec(
         seed=seed,
         n_requests=n_requests,
         vocab=cfg.vocab,
-        prompt=LengthDist(kind="uniform", low=4, high=13),
+        prompt=prompt,
         output=LengthDist(kind="uniform", low=max(1, max_new // 2), high=max_new),
         arrival=ArrivalSpec(process=arrival, gap=arrival_gap, burst=burst),
+        prefix_len=prefix_len,
     )
     return generate(spec)
 
@@ -172,6 +188,9 @@ def _replay(args, params, cfg, trace: Trace) -> Dict[str, Any]:
             controller=args.controller or None,
             tap_capacity=args.tap if args.controller else 0,
             prefill_budget=args.prefill_budget,
+            kv_block_size=args.block_size if args.paged else None,
+            kv_pool_blocks=args.pool_blocks,
+            kv_budget_bytes=args.kv_budget,
         )
         st = run_trace(params, cfg, ecfg, trace)
         tokens = st.pop("completion_tokens")
@@ -196,6 +215,10 @@ def _replay(args, params, cfg, trace: Trace) -> Dict[str, Any]:
                 "decode_iterations": st["decode_iterations"],
                 "replan_count": st["replan_count"],
                 "controller": st["controller"],
+                # paged-pool observability (None on the slot pool): peak
+                # blocks in use, shared-block hit ratio, preemptions
+                "peak_active": st["peak_active"],
+                "block_pool": st["block_pool"],
             }
         )
     ratios = [e["measured_tps"] / e["modeled_tps"] for e in entries]
@@ -246,6 +269,109 @@ def _gate(args, report: Dict[str, Any]) -> None:
                 )
     if failures:
         raise SystemExit("FAIL: " + "; ".join(failures))
+
+
+# --- paged gate -----------------------------------------------------------
+
+
+def _paged_gate(args, params, cfg, trace: Trace) -> Dict[str, Any]:
+    """Equal-memory A/B: fixed-slot pool vs paged block pool on a
+    prefix-heavy trace.
+
+    Both engines get the SAME KV byte budget — ``--gate-slots`` full
+    ``cache_len`` slots, which the paged side receives as the equivalent
+    block count (``cache_len`` must divide evenly into blocks so the
+    budgets match exactly).  The gate asserts the paged engine (a) held
+    strictly more requests in flight at its peak and (b) produced
+    token-identical completions per request — prefix sharing buys
+    concurrency, never output drift."""
+    from repro import planning
+
+    bs = args.block_size
+    clen = args.cache_len
+    if clen % bs:
+        raise SystemExit(f"--cache-len {clen} must be a multiple of --block-size {bs}")
+    mbs = clen // bs
+    tok_bytes = planning.kv_token_bytes(lm.n_scan_blocks(cfg), cfg.n_kv, cfg.head_dim, 8)
+    budget = args.gate_slots * clen * tok_bytes
+
+    common = dict(
+        cache_len=clen,
+        quantize=True,
+        ql=args.ql,
+        group_size=32,
+        quant_kv=True,
+        mode="continuous",
+        prefill_budget=args.prefill_budget,
+    )
+    slot = run_trace(
+        params, cfg, EngineConfig(batch_size=args.gate_slots, **common), trace
+    )
+    paged = run_trace(
+        params,
+        cfg,
+        EngineConfig(
+            batch_size=args.batch,
+            kv_block_size=bs,
+            kv_pool_blocks=args.gate_slots * mbs,
+            **common,
+        ),
+        trace,
+    )
+    slot_tokens = slot.pop("completion_tokens")
+    paged_tokens = paged.pop("completion_tokens")
+    identical = slot_tokens == paged_tokens
+    report = {
+        "trace": {
+            "hash": trace.trace_hash,
+            "requests": len(trace.requests),
+            "prefix_len": trace.spec.prefix_len,
+            "spec": trace.spec.to_json(),
+        },
+        "kv_budget_bytes": budget,
+        "slot": {
+            "batch_size": args.gate_slots,
+            "peak_active": slot["peak_active"],
+            "iterations": slot["iterations"],
+            "mean_ttft_s": slot["mean_ttft_s"],
+        },
+        "paged": {
+            "batch_size": args.batch,
+            "pool_blocks": args.gate_slots * mbs,
+            "block_size": bs,
+            "peak_active": paged["peak_active"],
+            "iterations": paged["iterations"],
+            "mean_ttft_s": paged["mean_ttft_s"],
+            "block_pool": paged["block_pool"],
+        },
+        "token_identical": identical,
+    }
+    print(
+        f"equal KV budget {budget} B ({args.gate_slots} x {clen}-token slots"
+        f" == {args.gate_slots * mbs} x {bs}-token blocks):"
+    )
+    print(
+        f"  slot  pool: peak {slot['peak_active']} concurrent, "
+        f"{slot['iterations']} iterations"
+    )
+    bp = paged["block_pool"]
+    print(
+        f"  paged pool: peak {paged['peak_active']} concurrent, "
+        f"{paged['iterations']} iterations, shared ratio "
+        f"{bp['shared_ratio']:.2f}, {bp['preemptions']} preemptions"
+    )
+    print(f"  completions token-identical: {identical}")
+    failures = []
+    if paged["peak_active"] <= slot["peak_active"]:
+        failures.append(
+            f"paged peak concurrency {paged['peak_active']} did not beat "
+            f"the slot pool's {slot['peak_active']} at equal memory"
+        )
+    if not identical:
+        failures.append("paged completions diverged from the slot pool's")
+    if failures:
+        raise SystemExit("FAIL: " + "; ".join(failures))
+    return report
 
 
 # --- CLI ------------------------------------------------------------------
@@ -339,6 +465,46 @@ def main():
         action="store_true",
         help="replay each plan twice and require token-identical output",
     )
+    # paged KV pool
+    ap.add_argument(
+        "--prefix-len",
+        type=int,
+        default=0,
+        help="shared system-prompt tokens prepended to every request",
+    )
+    ap.add_argument(
+        "--prompt-len",
+        type=int,
+        default=None,
+        help="pin every request's (post-prefix) prompt to this length",
+    )
+    ap.add_argument(
+        "--paged",
+        action="store_true",
+        help="replay: serve from the paged block pool instead of slots",
+    )
+    ap.add_argument("--block-size", type=int, default=16, help="paged: tokens per KV block")
+    ap.add_argument("--pool-blocks", type=int, default=None, help="paged: pool size in blocks")
+    ap.add_argument(
+        "--kv-budget",
+        type=int,
+        default=None,
+        metavar="BYTES",
+        help="paged: size the pool from a KV byte budget",
+    )
+    ap.add_argument(
+        "--paged-gate",
+        action="store_true",
+        help="equal-memory slot-vs-paged A/B gate: the paged pool must "
+        "sustain strictly higher peak concurrency with token-identical "
+        "output (prefix-heavy traces; see --prefix-len/--gate-slots)",
+    )
+    ap.add_argument(
+        "--gate-slots",
+        type=int,
+        default=3,
+        help="paged gate: KV budget quoted as this many full cache_len slots",
+    )
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch)
@@ -354,6 +520,8 @@ def main():
             seed=args.seed,
             arrival=args.arrival,
             burst=args.burst,
+            prefix_len=args.prefix_len,
+            prompt_len=args.prompt_len,
         )
     if args.save_trace:
         trace.save(args.save_trace)
@@ -364,6 +532,14 @@ def main():
         f"{trace.total_prompt_tokens} prompt tokens, "
         f"<= {trace.total_new_tokens} new), pool of {args.batch} slots"
     )
+
+    if args.paged_gate:
+        report = _paged_gate(args, params, cfg, trace)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"wrote {args.json}")
+        return
 
     if args.replay:
         report = _replay(args, params, cfg, trace)

@@ -190,7 +190,8 @@ class IterationScheduler:
             self.free_slots = list(range(self.max_batch))
             self._slots_init = True
 
-    def schedule(self, max_active: Optional[int] = None) -> List[Request]:
+    def schedule(self, max_active: Optional[int] = None,
+                 can_admit=None) -> List[Request]:
         """Admit waiting requests into free slots; return the newly
         admitted ones (state PREFILL, ``slot`` assigned).
 
@@ -199,6 +200,13 @@ class IterationScheduler:
         exempt so an over-budget prompt cannot starve).  ``max_active``
         caps total occupancy below the pool size — the SLO controller's
         shrink/shed lever (deferred requests stay queued in FIFO order).
+
+        ``can_admit``: optional callback ``Request -> bool`` consulted
+        last, immediately before a request would be admitted — the paged
+        engine's block-availability gate (which may allocate blocks as a
+        side effect, hence "consulted last": it only fires for requests
+        that are otherwise certain to be admitted).  A False answer stops
+        admission for this call, preserving FIFO order.
         """
         self._ensure_slots()
         admitted: List[Request] = []
@@ -210,6 +218,8 @@ class IterationScheduler:
             if (admitted and self.prefill_budget is not None
                     and used + nxt.prompt_len > self.prefill_budget):
                 break
+            if can_admit is not None and not can_admit(nxt):
+                break
             req = self.waiting.pop(0)
             req.slot = self.free_slots.pop(0)
             req.state = PREFILL
@@ -217,6 +227,27 @@ class IterationScheduler:
             self.running.append(req)
             admitted.append(req)
         return admitted
+
+    def preempt(self, uid: int) -> Request:
+        """Evict a running request back to the FRONT of the waiting queue.
+
+        Recompute-style preemption under memory pressure: the slot is
+        freed, state returns to WAITING, and the request is requeued ahead
+        of everyone else so it is the first to resume once blocks free up.
+        The caller (engine) is responsible for releasing its KV blocks and
+        adjusting ``prompt_len`` to cover already-committed tokens.
+        """
+        for r in self.running:
+            if r.uid == uid:
+                self.running.remove(r)
+                if r.slot >= 0:
+                    self.free_slots.append(r.slot)
+                    self.free_slots.sort()
+                    r.slot = -1
+                r.state = WAITING
+                self.waiting.insert(0, r)
+                return r
+        raise KeyError(f"uid {uid} not running")
 
     def release(self, uid: int) -> Request:
         """Retire a finished request; its slot returns to the free pool."""

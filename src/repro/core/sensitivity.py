@@ -20,6 +20,11 @@ serving feature:
     ONE unit's matmul inputs at each candidate ``abits`` (gate-masked
     ``ActQuantWeight`` wrapper, one compiled forward per path) against
     the same exact center.
+  * ``kv_sensitivity`` — the KV-cache twin: prefill an f32 cache, then
+    per layer quantize->dequantize that layer's cached K/V (the exact
+    int8 transform ``quant_kv`` serving applies) and measure one decode
+    step's logit MSE vs the f32-cache reference.  ``Planner`` resolves
+    ``PlanSpec.kv_bits="auto"`` against the normalized total.
   * ``calibrate_policy`` — end-to-end: score, solve, and return a
     ``QuantPolicy`` whose ``allocation`` carries per-path (and per-layer)
     bits; ``quantize_params`` then emits a mixed tree.  With
@@ -32,6 +37,12 @@ serving feature:
     string grammar (``"uniform:<b>[a<ab>]"``, ``"rules:..."``,
     ``"auto:q<b>[a<ab>][,prt=...][,maxseg=<n>][,slo=<tps>]"``,
     ``"auto:<f>bpw"``) enters only via ``PlanSpec.parse``.
+
+Invariants the probes guarantee: every score is measured against an
+exact center (f32 reference logits from the SAME jitted forward), probes
+are deterministic for a given (params, tokens) — calibration batches are
+seeded — and probing never mutates ``params`` (tree surgery happens on
+copies of the flattened leaf list).
 """
 from __future__ import annotations
 
@@ -248,6 +259,52 @@ def output_sensitivity(params, cfg, tokens, policy,
                 errs[b] = probe(idx, dq)
             scores[(pstr, None)] = errs
     return scores
+
+
+def kv_sensitivity(params, cfg, tokens, bits: int = 8) -> Dict[str, Any]:
+    """Per-layer decode-logit error from quantizing ONE layer's KV cache.
+
+    The probe mirrors the weight probes' exact-centering: prefill the
+    calibration batch with an f32 cache, take one reference decode step,
+    then for each layer quantize->dequantize that layer's cached K and V
+    (int8 per-head-dim absmax — the exact transform ``quant_kv`` serving
+    applies) and re-run the same decode step.  Scores are logit MSE vs
+    the reference; ``relative`` normalizes the summed error by the
+    reference logit power — the number ``Planner`` compares against
+    ``kv_tolerance`` when resolving ``kv_bits="auto"``.
+
+    Attention families only (recurrent state has no KV to quantize).
+    """
+    from repro.core.quant import dequantize_kv, quantize_kv
+    from repro.models import lm
+    if bits != 8:
+        raise ValueError(f"only int8 KV is served; got bits={bits}")
+    if cfg.family == "ssm":
+        raise ValueError("kv_sensitivity needs an attention family "
+                         f"(family={cfg.family!r} has no KV cache)")
+    b, t = tokens.shape
+    logits, cache = lm.prefill(params, tokens, cfg, cache_len=t + 1,
+                               quant_kv=False)
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    ref, _ = lm.decode_step(params, tok, cache, cfg)
+    ref = ref.astype(jnp.float32)
+    denom = float(jnp.mean(ref ** 2))
+    layers = cache["layers"]
+    n_layers = int(layers["k"].shape[0])
+    per_layer = []
+    for i in range(n_layers):
+        kd = dequantize_kv(*quantize_kv(layers["k"][i]))
+        vd = dequantize_kv(*quantize_kv(layers["v"][i]))
+        probed = dict(layers)
+        probed["k"] = layers["k"].at[i].set(kd)
+        probed["v"] = layers["v"].at[i].set(vd)
+        lg, _ = lm.decode_step(params, tok,
+                               {"length": cache["length"],
+                                "layers": probed}, cfg)
+        per_layer.append(float(jnp.mean((lg.astype(jnp.float32) - ref) ** 2)))
+    total = float(sum(per_layer))
+    return {"bits": int(bits), "per_layer": per_layer, "total": total,
+            "relative": total / max(denom, 1e-30)}
 
 
 def activation_sensitivity(params, cfg, tokens, policy,

@@ -142,11 +142,18 @@ def _kv_from_seq(attn_p, h, cfg: ModelConfig, positions):
 
 def block_apply_decode(p, x, cfg: ModelConfig, layer_cache, position,
                        cache_len: int, moe_mode: str = "dense",
-                       quant_kv: bool = False):
+                       quant_kv: bool = False, block_tables=None):
     """One-token decode.  x: [B, 1, D]; position: [B] absolute positions.
 
     layer_cache holds this layer's state (ring-buffered KV of size
     ``cache_len``, ssm/xlstm states).  Returns (x, new_cache).
+
+    block_tables: optional [B, max_blocks] int32 — paged mode, where
+    layer_cache KV is a block pool ``[num_blocks, block_size, KV, Dh]``
+    and ``cache_len == max_blocks * block_size``.  The write scatters
+    through the table; attention gathers the lane's blocks into a
+    contiguous view and reuses the ring validity math (paged lanes never
+    wrap, so "slot holds position slot" makes the two formulas agree).
     """
     from repro.core.quant import quantize_kv
     from repro.models.layers import apply_rope, _qk_norm
@@ -181,23 +188,50 @@ def block_apply_decode(p, x, cfg: ModelConfig, layer_cache, position,
         q = apply_rope(q, position[:, None], cfg)
         k = apply_rope(k, position[:, None], cfg)
 
-    # ring-buffer write at position % cache_len
-    slot = (position % cache_len)[:, None, None, None]
-    if quant_kv:
-        kq, ks = quantize_kv(k)
-        vq, vs = quantize_kv(v)
-        kc = _ring_write(layer_cache["k"], kq, slot)
-        vc = _ring_write(layer_cache["v"], vq, slot)
-        ksc = _ring_write(layer_cache["k_scale"], ks, slot)
-        vsc = _ring_write(layer_cache["v_scale"], vs, slot)
-        new_cache.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
-        kf = kc.astype(jnp.float32) * ksc
-        vf = vc.astype(jnp.float32) * vsc
+    if block_tables is not None:
+        # paged write: scatter through the block table, then gather the
+        # lane's blocks back into a contiguous [B, S, KV, Dh] view
+        bs = layer_cache["k"].shape[1]
+        nbp = block_tables.shape[1]
+        logical = jnp.clip(position // bs, 0, nbp - 1)
+        off = position % bs
+        phys = jnp.take_along_axis(block_tables, logical[:, None],
+                                   axis=1)[:, 0]
+        gather = lambda pool: pool[block_tables].reshape(
+            (b, nbp * bs) + pool.shape[2:])
+        if quant_kv:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            kc = _paged_write(layer_cache["k"], kq, phys, off)
+            vc = _paged_write(layer_cache["v"], vq, phys, off)
+            ksc = _paged_write(layer_cache["k_scale"], ks, phys, off)
+            vsc = _paged_write(layer_cache["v_scale"], vs, phys, off)
+            new_cache.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+            kf = gather(kc).astype(jnp.float32) * gather(ksc)
+            vf = gather(vc).astype(jnp.float32) * gather(vsc)
+        else:
+            kc = _paged_write(layer_cache["k"], k, phys, off)
+            vc = _paged_write(layer_cache["v"], v, phys, off)
+            new_cache.update(k=kc, v=vc)
+            kf, vf = gather(kc), gather(vc)
     else:
-        kc = _ring_write(layer_cache["k"], k, slot)
-        vc = _ring_write(layer_cache["v"], v, slot)
-        new_cache.update(k=kc, v=vc)
-        kf, vf = kc, vc
+        # ring-buffer write at position % cache_len
+        slot = (position % cache_len)[:, None, None, None]
+        if quant_kv:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            kc = _ring_write(layer_cache["k"], kq, slot)
+            vc = _ring_write(layer_cache["v"], vq, slot)
+            ksc = _ring_write(layer_cache["k_scale"], ks, slot)
+            vsc = _ring_write(layer_cache["v_scale"], vs, slot)
+            new_cache.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+            kf = kc.astype(jnp.float32) * ksc
+            vf = vc.astype(jnp.float32) * vsc
+        else:
+            kc = _ring_write(layer_cache["k"], k, slot)
+            vc = _ring_write(layer_cache["v"], v, slot)
+            new_cache.update(k=kc, v=vc)
+            kf, vf = kc, vc
 
     attn_out = _decode_attend(q, kf, vf, position, cfg, cache_len)
     attn_out = mm(attn_out.reshape(b, 1, cfg.q_dim), p["attn"]["wo"])
@@ -232,6 +266,17 @@ def _ring_write(cache, val, slot):
     return cache.at[jnp.arange(b), idx].set(
         val[:, 0].astype(cache.dtype), unique_indices=True,
         indices_are_sorted=False)
+
+
+def _paged_write(pool, val, phys, off):
+    """Scatter one token per lane into the paged block pool.
+
+    pool [NB, BS, KV, D(or 1)], val [B, 1, KV, D], phys/off [B].
+    No ``unique_indices``: retired lanes share the trash block, so
+    duplicate destinations are expected — their values are dead either
+    way (the engine never reads the trash block through a live table).
+    """
+    return pool.at[phys, off].set(val[:, 0].astype(pool.dtype))
 
 
 def _decode_attend(q, k, v, position, cfg: ModelConfig, cache_len: int):

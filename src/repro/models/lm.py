@@ -281,6 +281,38 @@ def init_cache(params, cfg: ModelConfig, batch: int, cache_len: int,
     return cache
 
 
+def init_paged_cache(params, cfg: ModelConfig, max_batch: int,
+                     num_blocks: int, block_size: int,
+                     quant_kv: bool = False) -> Dict[str, Any]:
+    """Allocate a paged KV block pool.
+
+    KV arrays are ``[L, num_blocks, block_size, n_kv, head_dim]`` — a flat
+    pool of fixed-size blocks shared by every request; which block holds
+    which request's tokens is decided per step by the ``block_tables``
+    argument of :func:`decode_step`.  Callers conventionally reserve the
+    LAST physical block as a trash block: retired lanes' table entries and
+    masked scatter positions point at it so dead writes never land in a
+    live block.  ``length`` is still per-lane (``[max_batch]``).
+
+    Attention families only — recurrent state (ssm/xlstm) is O(1) per lane
+    and gains nothing from paging.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"paged KV cache requires an attention family, got {cfg.family!r}")
+    nb = n_scan_blocks(cfg)
+    kv_shape = (nb, num_blocks, block_size, cfg.n_kv, cfg.head_dim)
+    sc_shape = (nb, num_blocks, block_size, cfg.n_kv, 1)
+    layers: Dict[str, Any] = {
+        "k": jnp.zeros(kv_shape, jnp.int8 if quant_kv else jnp.float32),
+        "v": jnp.zeros(kv_shape, jnp.int8 if quant_kv else jnp.float32),
+    }
+    if quant_kv:
+        layers["k_scale"] = jnp.zeros(sc_shape, jnp.float32)
+        layers["v_scale"] = jnp.zeros(sc_shape, jnp.float32)
+    return {"length": jnp.zeros((max_batch,), jnp.int32), "layers": layers}
+
+
 def prefill(params, tokens, cfg: ModelConfig, cache_len: int,
             quant_kv: bool = False,
             prefix_embeds: Optional[jax.Array] = None,
@@ -388,12 +420,69 @@ def prefill_into_slot(params, tokens, cache, slot, cfg: ModelConfig,
     return logits, _scatter_slots_jit(cache, fresh, slots)
 
 
+def _scatter_blocks(pool: Dict[str, Any], fresh: Dict[str, Any],
+                    slots: jax.Array, phys: jax.Array,
+                    offs: jax.Array) -> Dict[str, Any]:
+    """Write a freshly prefilled batch-b cache into pool blocks.
+
+    fresh layers are ``[L, b, T, ...]``; ``phys``/``offs`` are flat
+    ``[b*T]`` (physical block, in-block offset) destinations for each of
+    the b*T prefilled token rows.  Padding rows and rows that land in
+    SHARED prefix blocks are redirected to the trash block by the caller,
+    so shared blocks are never rewritten (sharers keep attending to
+    bit-identical KV) and duplicate trash writes only ever carry dead
+    values.
+    """
+    def put(dst, src):
+        flat = src.reshape((src.shape[0], -1) + src.shape[3:])
+        return dst.at[:, phys, offs].set(flat.astype(dst.dtype))
+
+    layers = jax.tree_util.tree_map(put, pool["layers"], fresh["layers"])
+    length = pool["length"].at[slots].set(fresh["length"])
+    return {"length": length, "layers": layers}
+
+
+_scatter_blocks_jit = jax.jit(_scatter_blocks, donate_argnums=(0,))
+
+
+def _copy_blocks(layers: Dict[str, Any], src: jax.Array,
+                 dst: jax.Array) -> Dict[str, Any]:
+    """Copy-on-write: duplicate pool blocks ``src`` into free blocks ``dst``."""
+    return jax.tree_util.tree_map(
+        lambda a: a.at[:, dst].set(a[:, src]), layers)
+
+
+_copy_blocks_jit = jax.jit(_copy_blocks, donate_argnums=(0,))
+
+
+def prefill_into_blocks(params, tokens, cache, slots, phys, offs,
+                        cfg: ModelConfig, quant_kv: bool = False,
+                        lengths: Optional[jax.Array] = None,
+                        moe_mode: str = "dense"):
+    """Prefill request(s) and scatter their KV into a paged block pool.
+
+    tokens: [b, T] right-padded prompts.  cache: pool from
+    :func:`init_paged_cache`.  slots: [b] decode-lane indices (for
+    ``length``).  phys/offs: flat [b*T] block destinations (trash-redirected
+    where a row must not be written — padding and shared prefix blocks).
+    Returns (last-token logits [b, V], updated pool).
+    """
+    slots = jnp.atleast_1d(jnp.asarray(slots, jnp.int32))
+    logits, fresh = prefill(params, tokens, cfg, cache_len=tokens.shape[1],
+                            quant_kv=quant_kv, lengths=lengths,
+                            moe_mode=moe_mode)
+    return logits, _scatter_blocks_jit(
+        cache, fresh, slots,
+        jnp.asarray(phys, jnp.int32), jnp.asarray(offs, jnp.int32))
+
+
 @partial(jax.jit, static_argnames=("cfg", "quant_kv", "moe_mode",
                                    "capture_layer_inputs"))
 def decode_step(params, tokens, cache, cfg: ModelConfig,
                 quant_kv: bool = False, moe_mode: str = "dense",
                 active_mask: Optional[jax.Array] = None,
-                capture_layer_inputs: bool = False):
+                capture_layer_inputs: bool = False,
+                block_tables: Optional[jax.Array] = None):
     """One decode step.  tokens [B, 1] -> (logits [B, V], new cache).
 
     active_mask: optional [B] bool — retired slots keep their cache
@@ -402,6 +491,16 @@ def decode_step(params, tokens, cache, cfg: ModelConfig,
     the matmuls (the weight stream is shared either way) but their
     outputs are dead values the engine ignores until the slot is
     re-prefilled.
+
+    block_tables: optional [B, max_blocks] int32 — paged mode.  cache is
+    a pool from ``init_paged_cache``; lane i's logical block j lives in
+    physical block ``block_tables[i, j]``.  Writes scatter through the
+    table at ``position``; attention gathers the lane's blocks back into
+    a contiguous [max_blocks*block_size] view.  Paged lanes must never
+    wrap (callers enforce prompt+max_new <= max_blocks*block_size), under
+    which the ring validity arithmetic reduces exactly to "slot <=
+    position", so both layouts share one attention path.  Retired lanes'
+    table rows point at the trash block.
 
     capture_layer_inputs: additionally return each block's input
     activations as a third result ([n_layers, B, 1, D]) — the vectors
@@ -417,12 +516,17 @@ def decode_step(params, tokens, cache, cfg: ModelConfig,
             params["pos_embed"][position][:, None]
     cache_len = (cache["layers"]["k"].shape[2]
                  if cfg.family != "ssm" else 0)
+    if block_tables is not None:
+        # paged: logical length = table width * block size (shape[2] is the
+        # block size for a [L, NB, BS, n_kv, head_dim] pool)
+        cache_len = block_tables.shape[1] * cache["layers"]["k"].shape[2]
 
     def body(x, inp):
         p_l, cache_l = inp
         y, new_cache_l = blk.block_apply_decode(
             p_l, x, cfg, cache_l, position, cache_len,
-            moe_mode=moe_mode, quant_kv=quant_kv)
+            moe_mode=moe_mode, quant_kv=quant_kv,
+            block_tables=block_tables)
         if capture_layer_inputs:
             return y, (new_cache_l, x)
         return y, new_cache_l

@@ -21,6 +21,9 @@ from repro.planning.cost import (
     PlanCost,
     Slo,
     calib_for_layer,
+    kv_block_bytes,
+    kv_pool_blocks,
+    kv_token_bytes,
     policy_units,
     unquantized_bytes,
 )
@@ -41,6 +44,9 @@ __all__ = [
     "Slo",
     "as_plan",
     "calib_for_layer",
+    "kv_block_bytes",
+    "kv_pool_blocks",
+    "kv_token_bytes",
     "machine_from_json",
     "plan_from_arg",
     "policy_units",

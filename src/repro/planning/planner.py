@@ -16,6 +16,18 @@ request.
 Sensitivity probes are cached on the planner: the expensive forward
 probes run once, and every subsequent ``solve``/``replan`` (budget
 sweeps, SLO changes, online recalibration) reuses them.
+
+Invariants:
+
+- ``solve`` is deterministic for a given (params, plan, slo, calib) —
+  probes are seeded and cached, so repeated solves return the same spec.
+- A returned ``PlanResult.spec`` is always *solved*: ``auto`` modes carry
+  ``weights_per_unit``/``acts_per_unit`` and a ``kv_bits`` of ``"auto"``
+  is resolved to a concrete 8 or 32 (per-layer KV probe vs
+  ``kv_tolerance``) before the result leaves the planner.
+- ``replan`` never mutates the served plan's allocation unless
+  ``resolve=True``; the cheap path only re-prices under measured PRT
+  discounts.
 """
 
 from __future__ import annotations
@@ -41,6 +53,8 @@ class PlanResult:
     cost: Optional[PlanCost] = None
     budgets: Any = None
     measured_prt_hit_rate: Optional[float] = None
+    # per-layer KV quantization probe (when the plan asked kv_bits="auto")
+    kv_sensitivity: Optional[dict] = None
 
     @property
     def meets_slo(self) -> Optional[bool]:
@@ -67,6 +81,7 @@ class Planner:
         tokens=None,
         scores=None,
         act_scores=None,
+        kv_tolerance: float = 0.05,
     ):
         from repro.models.sail_linear import QuantPolicy
 
@@ -92,6 +107,8 @@ class Planner:
         self._tokens = tokens
         self._scores = scores
         self._act_scores = act_scores
+        self.kv_tolerance = kv_tolerance
+        self._kv_scores: Optional[dict] = None
         self._fixed_bytes: Optional[int] = None
         self.last: Optional[PlanResult] = None
 
@@ -130,10 +147,16 @@ class Planner:
         per-layer mapping; defaults to the cost model's batch.
         """
         plan = plan or self.plan
+        kv_scores = None
+        if plan.kv_bits == "auto":
+            plan, kv_scores = self._resolve_kv(plan)
         if plan.mode != "auto":
             policy = plan.to_policy(self.base)
             result = PlanResult(
-                spec=plan, policy=policy, cost=self._price(policy, plan, calib, slo)
+                spec=plan,
+                policy=policy,
+                cost=self._price(policy, plan, calib, slo),
+                kv_sensitivity=kv_scores,
             )
             self.last = result
             return result
@@ -184,9 +207,26 @@ class Planner:
             report=report,
             cost=self._price(policy, plan, calib, slo),
             budgets=budgets,
+            kv_sensitivity=kv_scores,
         )
         self.last = result
         return result
+
+    def _resolve_kv(self, plan: PlanSpec):
+        """Resolve ``kv_bits="auto"`` to a concrete 8 or 32.
+
+        Runs the per-layer KV quantization probe (cached): int8 KV is
+        adopted when the summed decode-logit error, relative to the
+        reference logit power, stays within ``kv_tolerance`` — otherwise
+        the plan keeps f32 KV and pays the bytes.
+        """
+        if self._kv_scores is None:
+            if self._tokens is None:
+                self._tokens = sens.calibration_tokens(self.cfg.vocab)
+            self._kv_scores = sens.kv_sensitivity(self.params, self.cfg, self._tokens)
+        bits = 8 if self._kv_scores["relative"] <= self.kv_tolerance else 32
+        solved = dataclasses.replace(plan, kv_bits=bits, quant_kv=bits == 8)
+        return solved, self._kv_scores
 
     def _solved_spec(self, plan: PlanSpec, report, slo: Optional[Slo]) -> PlanSpec:
         assign = report.bits_by_unit

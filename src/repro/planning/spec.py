@@ -127,6 +127,11 @@ class PlanSpec:
     max_segments: Optional[int] = None
     # serving flags
     quant_kv: bool = True
+    # KV-cache precision as a plan dimension: None (defer to the engine's
+    # ``quant_kv`` flag), "auto" (Planner probes per-layer KV sensitivity
+    # and picks 8 vs 32), or a concrete 8 / 32.  int8 KV shrinks every
+    # paged block, so the same byte budget admits more concurrent users.
+    kv_bits: Optional[Union[int, str]] = None
     group_size: Optional[int] = None
     min_size: Optional[int] = None
     # solved allocation (None until a Planner ran)
@@ -160,13 +165,19 @@ class PlanSpec:
             raise ValueError(f"max_segments must be >= 1, got {self.max_segments}")
         if self.target_tps is not None and self.target_tps <= 0:
             raise ValueError(f"target_tps must be positive, got {self.target_tps}")
+        if self.kv_bits not in (None, "auto", 8, 32):
+            raise ValueError(f"kv_bits must be None, 'auto', 8, or 32, got {self.kv_bits!r}")
 
     # -- solved state -----------------------------------------------------
 
     @property
     def solved(self) -> bool:
         """Auto plans become solved once a Planner filled the per-unit
-        assignment; uniform/rules plans are directly servable."""
+        assignment; uniform/rules plans are directly servable.  A
+        ``kv_bits`` of ``"auto"`` keeps any plan unsolved — the Planner
+        must first probe KV sensitivity and pin a concrete 8 or 32."""
+        if self.kv_bits == "auto":
+            return False
         return self.mode != "auto" or self.weights_per_unit is not None
 
     def with_solution(self, weights_per_unit, acts_per_unit=None) -> "PlanSpec":
@@ -189,7 +200,7 @@ class PlanSpec:
     def parse(spec: str) -> "PlanSpec":
         """Parse the legacy ``--bit-policy`` grammar into a PlanSpec.
 
-          uniform:<b>[a<ab>]                  one precision everywhere
+          uniform:<b>[a<ab>][,kv=8|32|auto]   one precision everywhere
           rules:<regex>=<b>[a<ab>],...        per-path overrides
                                               (``default=``/``*=`` sets the
                                               fallback precision)
@@ -198,13 +209,25 @@ class PlanSpec:
           auto:<f>bpw[,<opt>...]              ... within f bits/weight
 
         Auto options: ``prt=off|paper|measured``, ``maxseg=<n>``,
-        ``a=<ab>``, and ``slo=<tps>`` (derive the budgets from a target
-        decode tokens/s instead of the uniform reference).
+        ``a=<ab>``, ``kv=8|32|auto`` (KV-cache precision; ``auto`` probes
+        per-layer KV sensitivity), and ``slo=<tps>`` (derive the budgets
+        from a target decode tokens/s instead of the uniform reference).
         """
         kind, _, rest = spec.partition(":")
         if kind == "uniform":
-            bits, abits = _parse_bits_token(rest)
-            return PlanSpec(mode="uniform", weight_bits=bits, act_bits=abits)
+            head, *opts = [p.strip() for p in rest.split(",") if p.strip()]
+            bits, abits = _parse_bits_token(head)
+            kw: Dict[str, Any] = {}
+            for opt in opts:
+                key, _, val = opt.partition("=")
+                if key == "kv":
+                    kw["kv_bits"] = val if val == "auto" else int(val)
+                else:
+                    raise ValueError(
+                        f"unknown uniform option {opt!r} in {spec!r} "
+                        "(only kv=8|32|auto)")
+            return PlanSpec(mode="uniform", weight_bits=bits,
+                            act_bits=abits, **kw)
         if kind == "rules":
             rules = []
             default_bits, default_act = None, None
@@ -249,6 +272,8 @@ class PlanSpec:
                     kw["max_segments"] = int(val)
                 elif key == "a":
                     kw["act_bits"] = int(val)
+                elif key == "kv":
+                    kw["kv_bits"] = val if val == "auto" else int(val)
                 elif key == "slo":
                     kw["target_tps"] = float(val)
                 else:
@@ -261,7 +286,10 @@ class PlanSpec:
         :meth:`parse` up to spec equivalence; the solved per-unit
         assignment has no grammar form — serialize those as JSON)."""
         if self.mode == "uniform":
-            return f"uniform:{_fmt_bits(self.weight_bits, self.act_bits)}"
+            head = f"uniform:{_fmt_bits(self.weight_bits, self.act_bits)}"
+            if self.kv_bits is not None:
+                head += f",kv={self.kv_bits}"
+            return head
         if self.mode == "rules":
             parts = [f"{r.pattern}={_fmt_bits(r.weight_bits, r.act_bits)}" for r in self.rules]
             if self.weight_bits is not None or self.act_bits is not None:
@@ -276,6 +304,8 @@ class PlanSpec:
             opts.append(f"prt={self.prt}")
         if self.max_segments is not None:
             opts.append(f"maxseg={self.max_segments}")
+        if self.kv_bits is not None:
+            opts.append(f"kv={self.kv_bits}")
         if self.target_tps is not None:
             opts.append(f"slo={self.target_tps:g}")
         return ",".join([head] + opts)
@@ -294,7 +324,17 @@ class PlanSpec:
         }
         if self.rules:
             out["rules"] = [r.to_json() for r in self.rules]
-        keys = ("budget_bpw", "target_tps", "slo_batch", "max_segments", "group_size", "min_size")
+        # kv_bits joined the schema in PR 8; omitted when unset so older
+        # plan hashes are unchanged
+        keys = (
+            "budget_bpw",
+            "target_tps",
+            "slo_batch",
+            "max_segments",
+            "kv_bits",
+            "group_size",
+            "min_size",
+        )
         for key in keys:
             val = getattr(self, key)
             if val is not None:
@@ -334,6 +374,11 @@ class PlanSpec:
                 int(spec["max_segments"]) if spec.get("max_segments") is not None else None
             ),
             quant_kv=bool(spec.get("quant_kv", True)),
+            kv_bits=(
+                spec.get("kv_bits")
+                if spec.get("kv_bits") in (None, "auto")
+                else int(spec["kv_bits"])
+            ),
             group_size=(int(spec["group_size"]) if spec.get("group_size") is not None else None),
             min_size=(int(spec["min_size"]) if spec.get("min_size") is not None else None),
             weights_per_unit=(_bits_from_json(wpu) if wpu is not None else None),

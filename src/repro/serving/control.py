@@ -151,12 +151,21 @@ class SloController:
         budget = self.slo.seconds_per_iteration
         return self._iter_seconds(int(occupancy)) <= budget * (1 + _SLO_EPS)
 
-    def batch_cap(self, pool: int) -> int:
+    def batch_cap(self, pool: int, free_cap: Optional[int] = None) -> int:
         """Largest occupancy (<= pool) at which the plan still meets the
         SLO, floored at ``min_batch``.  A cap below the pool counts one
-        ``shrink`` action each time it tightens."""
+        ``shrink`` action each time it tightens.
+
+        ``free_cap``: optional second bound from KV memory — with a paged
+        block pool, occupancy is feasible only if the blocks exist to
+        back it, so the cap is ``min(modeled cap, free_cap)``.  The memory
+        bound does not count ``shrink`` actions (that counter tracks the
+        modeled-SLO lever; block exhaustion is reported by the engine's
+        ``block_pool`` stats instead).
+        """
         pool = int(pool)
-        if self._cap is not None and self._cap_pool == pool:
+        key = (pool, None if free_cap is None else int(free_cap))
+        if self._cap is not None and self._cap_pool == key:
             return self._cap
         cap = pool
         if self.slo is not None and self._iter_seconds is not None:
@@ -171,7 +180,10 @@ class SloController:
             self.actions["shrink"] += 1
         elif self._prev_cap is None and cap < pool:
             self.actions["shrink"] += 1
-        self._cap, self._cap_pool, self._prev_cap = cap, pool, cap
+        self._prev_cap = cap
+        if free_cap is not None:
+            cap = max(min(cap, int(free_cap)), self.cfg.min_batch)
+        self._cap, self._cap_pool = cap, key
         return cap
 
     def record_shed(self, n: int = 1) -> None:

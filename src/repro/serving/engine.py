@@ -41,6 +41,33 @@ engine — controller or not — reports ``measured_tps`` / ``planned_tps``
 / ``drift`` in ``stats()`` so a stale calibration is visible.  The
 engine is synchronous and deterministic; streaming consumers hook
 ``submit(..., on_token=...)``.
+
+``EngineConfig.kv_block_size`` swaps the slot pool for a *paged* block
+pool (``lm.init_paged_cache`` + ``repro.serving.block_pool``): requests
+hold per-lane block tables into a shared pool instead of a worst-case
+``cache_len`` row, identical prompt prefixes share blocks copy-on-write,
+and admission is gated on free blocks with recompute-style preemption
+under pressure.  Paged-mode invariants:
+
+- the pool reserves one extra physical *trash* block; every masked or
+  retired lane's table entries point at it, so dead scatter writes never
+  corrupt a live block;
+- a paged lane never wraps: ``submit`` rejects requests whose
+  prompt+max_new exceed the table capacity, which is what lets the paged
+  and ring attention paths share one validity formula;
+- shared prefix blocks are never rewritten — prefill scatters of a
+  sharing request are trash-redirected over the shared span, and the
+  first divergent write triggers copy-on-write — so sharers always
+  attend to bit-identical KV;
+- preemption is recompute-style and lossless: the victim's blocks are
+  freed, its committed tokens become the resume prompt (re-prefilled on
+  re-admission, front of the FIFO), and under greedy sampling the
+  resumed request produces exactly the tokens it would have unpreempted.
+
+KV precision is plan-driven: a ``PlanSpec.kv_bits`` of 8/32 (or
+``"auto"``, resolved by the Planner's per-layer KV probe) overrides
+``EngineConfig.quant_kv``; the pool's dtype is fixed at construction and
+``apply_plan`` warns rather than reallocating mid-serve.
 """
 from __future__ import annotations
 
@@ -101,6 +128,19 @@ class EngineConfig:
     mode: str = "continuous"       # "continuous" | "batch" (run-to-completion)
     prefill_budget: Optional[int] = None  # new prefill tokens per iteration
     prompt_bucket: int = 16        # prompts padded to a multiple (compile reuse)
+    # Paged KV pool (continuous mode, attention families).  Setting a
+    # block size replaces the fixed [batch, cache_len] slot pool with a
+    # shared pool of fixed-size blocks managed by a
+    # repro.serving.block_pool.BlockSpaceManager: per-request block
+    # tables, copy-on-write prefix sharing, block-gated admission, and
+    # recompute-style preemption under pressure.
+    kv_block_size: Optional[int] = None   # tokens per block; None = slot pool
+    # pool sizing (first match wins): explicit block count, a byte budget
+    # priced via planning.kv_pool_blocks, else batch_size slot-equivalents
+    kv_pool_blocks: Optional[int] = None
+    kv_budget_bytes: Optional[int] = None
+    share_prefix: bool = True      # COW-share identical prompt prefixes
+    preempt: bool = True           # evict newest request when the pool runs dry
 
 
 @dataclasses.dataclass
@@ -229,6 +269,15 @@ class Engine:
             self.compression = b0 / max(b1, 1)
         else:
             self.params, self.compression = params, 1.0
+        # KV precision: the plan's kv_bits dimension (when concrete — the
+        # Planner resolves "auto" before the spec reaches here) overrides
+        # the legacy quant_kv flag; the pool dtype is fixed from here on.
+        kvb = (self.plan.kv_bits
+               if self.plan is not None
+               and isinstance(self.plan.kv_bits, int) else None)
+        self.kv_bits = kvb if kvb is not None else (8 if ecfg.quant_kv
+                                                    else 32)
+        self._quant_kv = self.kv_bits == 8
         self.sched = IterationScheduler(target_batch=ecfg.batch_size,
                                         max_batch=ecfg.batch_size,
                                         prefill_budget=ecfg.prefill_budget)
@@ -246,10 +295,40 @@ class Engine:
         clen = ecfg.cache_len if cfg.window is None \
             else min(ecfg.cache_len, cfg.window)
         self._clen = clen
+        self._orig_plen: Dict[int, int] = {}
+        self.peak_active = 0
+        self.paged = ecfg.kv_block_size is not None
+        self.block_mgr = None
+        if self.paged:
+            if ecfg.mode != "continuous":
+                raise ValueError("paged KV (kv_block_size) requires "
+                                 "mode='continuous'")
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    f"paged KV is attention-only; family={cfg.family!r} "
+                    "keeps recurrent state, not a block pool")
         if ecfg.mode == "continuous":
-            self.cache = lm.init_cache(self.params, cfg, ecfg.batch_size,
-                                       clen, ecfg.quant_kv)
             self._cur = np.zeros((ecfg.batch_size,), np.int32)
+            if self.paged:
+                from repro.serving.block_pool import BlockSpaceManager
+                bs = int(ecfg.kv_block_size)
+                self._mbs = -(-clen // bs)     # table columns per lane
+                nblocks = self._paged_pool_blocks(bs)
+                self.block_mgr = BlockSpaceManager(
+                    nblocks, bs, share_prefix=ecfg.share_prefix)
+                # one extra physical block: the trash block every dead
+                # table entry / masked lane points at
+                self._trash = nblocks
+                self.cache = lm.init_paged_cache(
+                    self.params, cfg, ecfg.batch_size, nblocks + 1, bs,
+                    self._quant_kv)
+                self._tables_np = np.full(
+                    (ecfg.batch_size, self._mbs), self._trash, np.int32)
+                self._len_np = np.zeros((ecfg.batch_size,), np.int64)
+            else:
+                self.cache = lm.init_cache(self.params, cfg,
+                                           ecfg.batch_size, clen,
+                                           self._quant_kv)
         if ecfg.controller:
             if ecfg.mode != "continuous":
                 warnings.warn(
@@ -276,10 +355,20 @@ class Engine:
         ``on_token(uid, token)`` (optional) is invoked as each generated
         token is committed — the streaming hook.
         """
+        if self.paged:
+            need = len(prompt) + max_new_tokens
+            room = self._mbs * int(self.ecfg.kv_block_size)
+            if need > room:
+                raise ValueError(
+                    f"request needs {need} KV positions but a paged lane "
+                    f"holds {room} ({self._mbs} blocks x "
+                    f"{self.ecfg.kv_block_size}) — paged lanes never "
+                    "wrap; raise cache_len or shorten the request")
         self._uid += 1
         self.sched.submit(Request(uid=self._uid, prompt_len=len(prompt),
                                   max_new_tokens=max_new_tokens,
                                   arrived_at=time.time()))
+        self._orig_plen[self._uid] = len(prompt)
         self._gen[self._uid] = list(prompt)
         self._t0[self._uid] = time.time()
         if on_token is not None:
@@ -295,9 +384,13 @@ class Engine:
             self._serve_batch()
             return not self.sched.idle()
         ctl = self.controller
-        cap = (ctl.batch_cap(self.ecfg.batch_size)
-               if ctl is not None and ctl.cfg.shed else None)
-        admitted = self.sched.schedule(max_active=cap)
+        cap = None
+        if ctl is not None and ctl.cfg.shed:
+            free_cap = self._block_free_cap() if self.paged else None
+            cap = ctl.batch_cap(self.ecfg.batch_size, free_cap=free_cap)
+        admitted = self.sched.schedule(
+            max_active=cap,
+            can_admit=self._try_allocate if self.paged else None)
         if (cap is not None and self.sched.waiting and self.sched.free_slots
                 and self.sched.active >= cap):
             # free slots exist but the SLO cap is binding: these
@@ -329,6 +422,12 @@ class Engine:
                 self._finish(req)
         # one masked decode iteration serves every still-active slot
         active = list(self.sched.running)
+        if self.paged and active:
+            # every active lane appends one KV position this iteration:
+            # grant it a block slot first (COW off shared blocks, preempt
+            # the newest arrival when the pool runs dry)
+            active = self._ensure_append_blocks(active)
+        self.peak_active = max(self.peak_active, len(active))
         if active:
             mask = np.zeros((self.ecfg.batch_size,), bool)
             for req in active:
@@ -338,9 +437,11 @@ class Engine:
             t0 = time.perf_counter()
             out = lm.decode_step(
                 self.params, jnp.asarray(self._cur[:, None]), self.cache,
-                self.cfg, quant_kv=self.ecfg.quant_kv,
+                self.cfg, quant_kv=self._quant_kv,
                 active_mask=jnp.asarray(mask),
-                capture_layer_inputs=capture)
+                capture_layer_inputs=capture,
+                block_tables=(jnp.asarray(self._tables_np)
+                              if self.paged else None))
             if capture:
                 logits, self.cache, layer_inputs = out
                 self.tap.observe(layer_inputs, mask)
@@ -357,6 +458,8 @@ class Engine:
             exp = self._modeled_iter_seconds(len(active))
             if exp is not None:
                 self.modeled_seconds += exp
+            if self.paged:
+                self._len_np[mask] += 1
             for req in active:
                 self._cur[req.slot] = nxt[req.slot]
                 self.events[req.uid].setdefault("first_decode_iteration",
@@ -372,6 +475,116 @@ class Engine:
             pass
         return list(self.completions.values())
 
+    # --- paged-pool internals ---------------------------------------------
+    def _paged_pool_blocks(self, bs: int) -> int:
+        """Pool size in blocks (excluding the trash block): explicit
+        count, else a byte budget priced by planning.kv_pool_blocks, else
+        batch_size worst-case slot-equivalents.  Clamped so one maximal
+        request always fits."""
+        from repro import planning
+        ecfg = self.ecfg
+        if ecfg.kv_pool_blocks is not None:
+            n = int(ecfg.kv_pool_blocks)
+        elif ecfg.kv_budget_bytes is not None:
+            n = planning.kv_pool_blocks(
+                ecfg.kv_budget_bytes, bs, lm.n_scan_blocks(self.cfg),
+                self.cfg.n_kv, self.cfg.head_dim, self.kv_bits)
+        else:
+            n = ecfg.batch_size * self._mbs
+        return max(n, self._mbs)
+
+    def _block_free_cap(self) -> int:
+        """How many requests the block pool could hold right now: the
+        active set plus a non-mutating greedy estimate of admissible
+        waiters (prefix sharing included) — the memory bound fed to
+        SloController.batch_cap."""
+        prompts = [tuple(self._gen[r.uid][:r.prompt_len])
+                   for r in self.sched.waiting]
+        return self.sched.active + self.block_mgr.admission_cap(prompts)
+
+    def _try_allocate(self, req: Request) -> bool:
+        """Scheduler admission gate: allocate the request's prefill
+        blocks (sharing any registered prefix).  Called only when
+        admission is otherwise certain, so allocating here is safe; a
+        False return stops this iteration's admissions (FIFO holds)."""
+        prompt = tuple(self._gen[req.uid][:req.prompt_len])
+        if not self.block_mgr.can_allocate(prompt):
+            return False
+        self.block_mgr.allocate(req.uid, prompt)
+        return True
+
+    def _ensure_append_blocks(self,
+                              active: List[Request]) -> List[Request]:
+        """Grant every active lane a physical slot for this iteration's
+        KV write: in-place into its frontier block, a fresh block at a
+        block boundary, or a copy-on-write split off a shared block.
+        When the pool runs dry the newest arrival is preempted
+        (recompute-style) and the grant retried.  Returns the requests
+        that still decode this iteration; COW copies are applied to the
+        device pool in one batched scatter."""
+        bs = int(self.ecfg.kv_block_size)
+        cows: List[tuple] = []
+        preempted: set = set()
+        granted: List[Request] = []
+        for req in active:
+            if req.uid in preempted:
+                continue
+            while True:
+                pos = int(self._len_np[req.slot])
+                res = self.block_mgr.append_slot(req.uid, pos)
+                if res is not None:
+                    kind, src, dst = res
+                    if kind in ("alloc", "cow"):
+                        self._tables_np[req.slot, pos // bs] = dst
+                    if kind == "cow":
+                        cows.append((src, dst))
+                    granted.append(req)
+                    break
+                victim = self._pick_victim()
+                if victim is None:
+                    raise MemoryError(
+                        "KV block pool exhausted and preemption is "
+                        "disabled (EngineConfig.preempt=False) — grow "
+                        "kv_pool_blocks/kv_budget_bytes")
+                self._preempt(victim)
+                preempted.add(victim.uid)
+                if victim is req:
+                    break
+        if cows:
+            src = jnp.asarray(np.asarray([s for s, _ in cows], np.int32))
+            dst = jnp.asarray(np.asarray([d for _, d in cows], np.int32))
+            self.cache["layers"] = lm._copy_blocks_jit(
+                self.cache["layers"], src, dst)
+        return [r for r in granted if r.uid not in preempted]
+
+    def _pick_victim(self) -> Optional[Request]:
+        """Preemption victim: the newest running request (FIFO priority —
+        the oldest work keeps its blocks)."""
+        if not self.ecfg.preempt:
+            return None
+        for cand in reversed(self.sched.running):
+            if self.block_mgr.has_table(cand.uid):
+                return cand
+        return None
+
+    def _preempt(self, victim: Request) -> None:
+        """Recompute-style eviction: free the victim's blocks, trash its
+        table row, and requeue it at the FRONT of the waiting queue with
+        its committed tokens as the resume prompt.  Under greedy
+        sampling the resumed request regenerates the exact suffix it
+        would have produced unpreempted."""
+        uid, slot = victim.uid, victim.slot
+        self.block_mgr.preempt(uid)
+        self._tables_np[slot, :] = self._trash
+        self._len_np[slot] = 0
+        self.sched.preempt(uid)
+        # resume prompt = original prompt + every committed token; the
+        # re-prefill recomputes their KV and re-samples the pending token
+        victim.prompt_len = len(self._gen[uid])
+        ev = self.events.setdefault(uid, {})
+        ev["preemptions"] = ev.get("preemptions", 0) + 1
+        ev["preempted_iteration"] = self.iterations
+
     # --- continuous internals ---------------------------------------------
     def _padded_len(self, req: Request) -> int:
         # recurrent families (ssm/hybrid) fold every input token into the
@@ -385,7 +598,13 @@ class Engine:
                        max(self._clen, plen)), plen)
 
     def _prefill_slots(self, reqs: List[Request], padded: int) -> None:
-        """One prefill pass admits a same-length group into its slots."""
+        """One prefill pass admits a same-length group into its slots.
+
+        Paged mode scatters the freshly computed KV through each
+        request's block table instead of into a contiguous slot row;
+        padding rows and shared-prefix rows are redirected to the trash
+        block (shared blocks are append-only for sharers — the KV they
+        attend to is the registrant's, bit-identical by construction)."""
         b = len(reqs)
         toks = np.zeros((b, padded), np.int32)
         lengths = np.zeros((b,), np.int32)
@@ -393,9 +612,32 @@ class Engine:
             toks[i, :req.prompt_len] = self._gen[req.uid][:req.prompt_len]
             lengths[i] = req.prompt_len
         slots = np.asarray([req.slot for req in reqs], np.int32)
-        logits, self.cache = lm.prefill_into_slot(
-            self.params, jnp.asarray(toks), self.cache, slots, self.cfg,
-            quant_kv=self.ecfg.quant_kv, lengths=jnp.asarray(lengths))
+        if self.paged:
+            bs = int(self.ecfg.kv_block_size)
+            phys = np.full((b, padded), self._trash, np.int32)
+            offs = np.tile(
+                (np.arange(padded) % bs).astype(np.int32), (b, 1))
+            for i, req in enumerate(reqs):
+                table = self.block_mgr.table(req.uid)
+                nsh = self.block_mgr.shared_prefix_blocks(req.uid)
+                row = np.full((self._mbs,), self._trash, np.int32)
+                row[:len(table)] = table
+                self._tables_np[req.slot] = row
+                for t in range(req.prompt_len):
+                    j = t // bs
+                    if j >= nsh:   # shared blocks keep the registrant's KV
+                        phys[i, t] = table[j]
+            logits, self.cache = lm.prefill_into_blocks(
+                self.params, jnp.asarray(toks), self.cache, slots,
+                phys.ravel(), offs.ravel(), self.cfg,
+                quant_kv=self._quant_kv, lengths=jnp.asarray(lengths))
+            for req in reqs:
+                self._len_np[req.slot] = req.prompt_len
+        else:
+            logits, self.cache = lm.prefill_into_slot(
+                self.params, jnp.asarray(toks), self.cache, slots,
+                self.cfg, quant_kv=self._quant_kv,
+                lengths=jnp.asarray(lengths))
         self.iterations += 1
         self.prefill_iterations += 1
         self.prefill_tokens += int(lengths.sum())
@@ -403,13 +645,26 @@ class Engine:
         now = time.time()
         for i, req in enumerate(reqs):
             self._cur[req.slot] = int(first[i])
-            self._ttft[req.uid] = now - self._t0[req.uid]
+            # preserved across preemption: TTFT is submit -> FIRST token
+            self._ttft.setdefault(req.uid, now - self._t0[req.uid])
             req.state = DECODE
-            self.events[req.uid] = {"admitted_iteration": self.iterations}
+            ev = self.events.setdefault(req.uid, {})
+            if "admitted_iteration" in ev:
+                ev["resumed_iteration"] = self.iterations
+            else:
+                ev["admitted_iteration"] = self.iterations
 
     def _finish(self, req: Request) -> None:
+        slot = req.slot
         self.sched.release(req.uid)
-        gen = self._gen[req.uid][req.prompt_len:]
+        if self.paged and self.block_mgr.has_table(req.uid):
+            self.block_mgr.free(req.uid)
+            self._tables_np[slot, :] = self._trash
+            self._len_np[slot] = 0
+        # slice at the ORIGINAL prompt length: after a preemption
+        # req.prompt_len includes committed tokens (the resume prompt)
+        gen = self._gen[req.uid][self._orig_plen.get(req.uid,
+                                                     req.prompt_len):]
         self.completions[req.uid] = Completion(
             uid=req.uid, tokens=gen,
             latency_s=time.time() - self._t0[req.uid],
@@ -430,9 +685,10 @@ class Engine:
             p = self._gen[r.uid][:r.prompt_len]
             toks[i, :len(p)] = p
             lengths[i] = len(p)
+        self.peak_active = max(self.peak_active, b)
         logits, cache = lm.prefill(
             self.params, jnp.asarray(toks), cfg, cache_len=self._clen,
-            quant_kv=ecfg.quant_kv, lengths=jnp.asarray(lengths))
+            quant_kv=self._quant_kv, lengths=jnp.asarray(lengths))
         self.iterations += 1
         self.prefill_iterations += 1
         self.prefill_tokens += int(lengths.sum())
@@ -461,7 +717,7 @@ class Engine:
                 break
             logits, cache = lm.decode_step(
                 self.params, cur[:, None], cache, cfg,
-                quant_kv=ecfg.quant_kv)
+                quant_kv=self._quant_kv)
             self.iterations += 1
             self.decode_iterations += 1
             cur = self._sample(logits)
@@ -606,6 +862,13 @@ class Engine:
         else:
             spec = planning.as_plan(plan)
             policy = spec.to_policy(self._base_policy())
+        if isinstance(spec.kv_bits, int) and spec.kv_bits != self.kv_bits:
+            warnings.warn(
+                f"plan requests kv_bits={spec.kv_bits} but the KV pool "
+                f"was allocated {self.kv_bits}-bit at construction — KV "
+                "precision cannot hot-swap under in-flight requests; "
+                "rebuild the engine to change it", UserWarning,
+                stacklevel=2)
         if force_requantize or policy != self.quant_policy:
             self.params, b0, b1 = quantize_params(self._raw_params,
                                                   policy)
@@ -701,6 +964,12 @@ class Engine:
                 "controller": (self.controller.stats()
                                if self.controller is not None else None),
                 "generated_tokens": toks,
+                # paged-pool observability: peak concurrent decode lanes
+                # (the gate metric), served KV precision, pool stats
+                "peak_active": self.peak_active,
+                "kv_bits": self.kv_bits,
+                "block_pool": (self.block_mgr.stats()
+                               if self.paged else None),
                 "iterations": self.iterations,
                 "prefill_iterations": self.prefill_iterations,
                 "decode_iterations": self.decode_iterations,

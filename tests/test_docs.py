@@ -1,0 +1,24 @@
+"""Docs stay verified: fenced python compiles, named repro.* symbols
+import, intra-repo links resolve (the CI docs-check, run in-suite)."""
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(_ROOT, "tools"))
+
+import check_docs  # noqa: E402
+
+
+@pytest.mark.parametrize("path", check_docs.doc_files(),
+                         ids=lambda p: os.path.relpath(p, _ROOT))
+def test_doc_file_is_clean(path):
+    assert os.path.exists(path), f"{path} missing"
+    with open(path) as f:
+        text = f.read()
+    rel = os.path.relpath(path, _ROOT)
+    errs = (check_docs.check_python_blocks(rel, text)
+            + check_docs.check_symbols(rel, text)
+            + check_docs.check_links(path, text))
+    assert not errs, "\n".join(errs)

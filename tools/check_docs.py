@@ -1,0 +1,141 @@
+"""Docs checker: keep the prose as verified as the code.
+
+Three checks over ``docs/*.md`` + ``README.md`` (run by the CI
+``docs-check`` job and ``tests/test_docs.py``):
+
+1. every fenced ``python`` code block must ``compile()``;
+2. every dotted ``repro.*`` symbol named anywhere in the text must
+   resolve — the longest importable module prefix is imported and the
+   remaining attributes are walked with ``getattr`` — so the docs can
+   only name API that actually exists;
+3. every intra-repo markdown link target must exist on disk.
+
+Exit code 0 when clean; nonzero with one line per violation.
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+# dotted repro.* references; trailing () / punctuation stripped below
+_SYMBOL = re.compile(r"\brepro(?:\.\w+)+")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def doc_files() -> List[str]:
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out.extend(
+            os.path.join(docs, f) for f in sorted(os.listdir(docs)) if f.endswith(".md")
+        )
+    return out
+
+
+def iter_code_blocks(text: str) -> Iterator[Tuple[int, str, str]]:
+    """Yield (start_line, language, source) for each fenced block."""
+    lang, buf, start = None, [], 0
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _FENCE.match(line)
+        if m and lang is None:
+            lang, buf, start = m.group(1) or "", [], i
+        elif line.strip() == "```" and lang is not None:
+            yield start, lang, "\n".join(buf)
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+
+
+def check_python_blocks(path: str, text: str) -> List[str]:
+    errs = []
+    for line, lang, src in iter_code_blocks(text):
+        if lang != "python":
+            continue
+        try:
+            compile(src, f"{path}:{line}", "exec")
+        except SyntaxError as e:
+            errs.append(f"{path}:{line}: python block does not compile: {e.msg}")
+    return errs
+
+
+def resolve_symbol(dotted: str) -> bool:
+    """Import the longest module prefix, then getattr the rest."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        modname = ".".join(parts[:cut])
+        try:
+            obj = importlib.import_module(modname)
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_symbols(path: str, text: str) -> List[str]:
+    errs = []
+    seen = set()
+    for i, line in enumerate(text.splitlines(), start=1):
+        for m in _SYMBOL.finditer(line):
+            dotted = m.group(0).rstrip(".")
+            if dotted in seen:
+                continue
+            seen.add(dotted)
+            if not resolve_symbol(dotted):
+                errs.append(f"{path}:{i}: unresolvable symbol {dotted!r}")
+    return errs
+
+
+def check_links(path: str, text: str) -> List[str]:
+    errs = []
+    base = os.path.dirname(path)
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), start=1):
+        if _FENCE.match(line) or line.strip() == "```":
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(resolved):
+                errs.append(f"{path}:{i}: dead link {target!r}")
+    return errs
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    errors: List[str] = []
+    for path in doc_files():
+        if not os.path.exists(path):
+            errors.append(f"{path}: missing")
+            continue
+        with open(path) as f:
+            text = f.read()
+        rel = os.path.relpath(path, ROOT)
+        errors += check_python_blocks(rel, text)
+        errors += check_symbols(rel, text)
+        errors += check_links(path, text)
+    for e in errors:
+        print(e)
+    if not errors:
+        print(f"docs-check: {len(doc_files())} files clean")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
