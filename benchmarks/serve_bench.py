@@ -89,7 +89,7 @@ def run_trace(params, cfg, ecfg: EngineConfig, trace: Trace) -> Dict[str, Any]:
     eng = Engine(params, cfg, ecfg)
     pending = sorted(trace.requests, key=lambda r: r.arrival_iteration)
     i = 0
-    t0 = time.time()
+    t0 = time.perf_counter()
     while i < len(pending) or not eng.sched.idle():
         while i < len(pending) and pending[i].arrival_iteration <= eng.iterations:
             eng.submit(list(pending[i].prompt), max_new_tokens=pending[i].max_new_tokens)
@@ -98,7 +98,7 @@ def run_trace(params, cfg, ecfg: EngineConfig, trace: Trace) -> Dict[str, Any]:
             # engine drained before the next arrival: jump to it
             eng.submit(list(pending[i].prompt), max_new_tokens=pending[i].max_new_tokens)
             i += 1
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     st = eng.stats()
     st["wall_s"] = wall
     st["tok_per_s"] = st["generated_tokens"] / max(wall, 1e-9)
@@ -374,6 +374,112 @@ def _paged_gate(args, params, cfg, trace: Trace) -> Dict[str, Any]:
     return report
 
 
+# --- speculative gate -----------------------------------------------------
+
+
+def _speculative_gate(args, params, cfg, trace: Trace) -> Dict[str, Any]:
+    """Greedy self-speculative A/B: one weight tree, two plans.
+
+    Replays the identical trace through the baseline plan and through the
+    same plan with a ``draft=`` clause, greedy both times.  The gate
+    asserts (a) token-identical completions per request — greedy
+    speculative decoding is exact, the draft/verify machinery may never
+    change output — and (b) measured decode tokens/s at least
+    ``--spec-speedup`` x the baseline's.  Each side runs twice and the
+    second run is timed: the first pays the jit compiles (the baseline
+    and speculative paths compile different kernels) and doubles as a
+    determinism check.
+
+    The default draft is the SAME precision as the baseline plan
+    (``q8a8:k8`` under ``uniform:8a8``): on this op-count-bound reference
+    backend a lower-bit draft step costs exactly what a full step costs,
+    so the measured win isolates what IS measurable on the host — one
+    fused k-token draft dispatch plus one batched verify dispatch
+    replacing k+1 single-token iterations, with per-position acceptance
+    exactly 1.  The bit-gap economics (fewer draft bytes vs acceptance
+    loss) are SAIL-hardware quantities; the DecodeCostModel prices them
+    and the planner's ``draft=auto`` solve arbitrates — pass a low-bit
+    ``--spec-draft`` (e.g. ``q4a8:k3``) to exercise the lossy-draft
+    accept/rollback path, which must still be token-identical.
+
+    Saturate the engine for a stable measurement: arrivals are indexed
+    by engine *iterations* and one speculative round is one iteration,
+    so a staggered trace starves the speculative side's batch (run with
+    ``--arrival-gap 0``)."""
+    base_label = (args.plan or ["uniform:8a8"])[0]
+    spec_label = f"{base_label},draft={args.spec_draft}"
+    common = dict(
+        batch_size=args.batch,
+        cache_len=args.cache_len,
+        quantize=True,
+        group_size=32,
+        min_size=1024,
+        quant_kv=False,
+        mode="continuous",
+        prefill_budget=args.prefill_budget,
+    )
+
+    def timed(label):
+        warm = run_trace(params, cfg, EngineConfig(plan=label, **common), trace)
+        st = run_trace(params, cfg, EngineConfig(plan=label, **common), trace)
+        if warm["completion_tokens"] != st["completion_tokens"]:
+            raise SystemExit(f"FAIL: plan {label} replay was not token-identical")
+        return st
+
+    base = timed(base_label)
+    spec = timed(spec_label)
+    base_tokens = base.pop("completion_tokens")
+    spec_tokens = spec.pop("completion_tokens")
+    identical = base_tokens == spec_tokens
+    speedup = spec["measured_tps"] / max(base["measured_tps"], 1e-9)
+    sstat = spec["speculative"]
+    report = {
+        "trace": {
+            "hash": trace.trace_hash,
+            "requests": len(trace.requests),
+            "spec": trace.spec.to_json(),
+        },
+        "baseline": {
+            "plan": base_label,
+            "measured_tps": base["measured_tps"],
+            "decode_iterations": base["decode_iterations"],
+            "generated_tokens": base["generated_tokens"],
+        },
+        "speculative": {
+            "plan": spec_label,
+            "measured_tps": spec["measured_tps"],
+            "decode_iterations": spec["decode_iterations"],
+            "generated_tokens": spec["generated_tokens"],
+            "rounds": sstat["rounds"],
+            "acceptance_rate": sstat["acceptance_rate"],
+            "expected_tokens_per_round": sstat["expected_tokens_per_round"],
+        },
+        "token_identical": identical,
+        "speedup": speedup,
+        "bound": args.spec_speedup,
+    }
+    print(
+        f"speculative gate ({spec_label} vs {base_label}): "
+        f"{spec['measured_tps']:.1f} vs {base['measured_tps']:.1f} decode tok/s "
+        f"= {speedup:.2f}x (bound {args.spec_speedup:g}x)"
+    )
+    print(
+        f"  {sstat['rounds']} rounds, acceptance {sstat['acceptance_rate']:.3f}, "
+        f"{spec['decode_iterations']}/{base['decode_iterations']} decode iterations, "
+        f"token-identical: {identical}"
+    )
+    failures = []
+    if not identical:
+        failures.append("greedy speculative completions diverged from the baseline's")
+    if speedup < args.spec_speedup:
+        failures.append(
+            f"measured speculative speedup {speedup:.2f}x below bound {args.spec_speedup:g}x"
+        )
+    if failures:
+        raise SystemExit("FAIL: " + "; ".join(failures))
+    return report
+
+
 # --- CLI ------------------------------------------------------------------
 
 
@@ -505,6 +611,27 @@ def main():
         default=3,
         help="paged gate: KV budget quoted as this many full cache_len slots",
     )
+    # self-speculative decoding
+    ap.add_argument(
+        "--speculative",
+        action="store_true",
+        help="A/B gate: the baseline plan vs the same plan with a draft= "
+        "clause must be token-identical (greedy) and at least "
+        "--spec-speedup x faster in measured decode tokens/s",
+    )
+    ap.add_argument(
+        "--spec-draft",
+        default="q8a8:k8",
+        help="speculative gate: the draft= clause (q<b>[a<ab>]:k<k>); "
+        "the same-precision default isolates round amortization, a "
+        "low-bit value exercises lossy-draft accept/rollback",
+    )
+    ap.add_argument(
+        "--spec-speedup",
+        type=float,
+        default=1.2,
+        help="speculative gate: minimum measured decode tokens/s ratio",
+    )
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch)
@@ -535,6 +662,14 @@ def main():
 
     if args.paged_gate:
         report = _paged_gate(args, params, cfg, trace)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"wrote {args.json}")
+        return
+
+    if args.speculative:
+        report = _speculative_gate(args, params, cfg, trace)
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(report, f, indent=2)

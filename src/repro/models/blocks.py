@@ -279,6 +279,160 @@ def _paged_write(pool, val, phys, off):
     return pool.at[phys, off].set(val[:, 0].astype(pool.dtype))
 
 
+# ---------------------------------------------------------------------------
+# speculative verify (multi-token decode, cache update)
+# ---------------------------------------------------------------------------
+
+def block_apply_verify(p, x, cfg: ModelConfig, layer_cache, position,
+                       cache_len: int, moe_mode: str = "dense",
+                       quant_kv: bool = False, block_tables=None):
+    """Multi-token decode for speculative verification.
+
+    x: [B, T, D] — the pending token plus the drafted tokens, occupying
+    absolute positions ``position + t`` (position: [B] is the first
+    slot's position).  Writes KV for all T positions — overwriting any
+    draft-precision KV the draft pass left at the same slots — and
+    attends chunk-causally: query t sees every cached position ``<=
+    position + t`` inside the window, including the tokens written this
+    call, never the ones after it.
+
+    Attention families only: recurrent state (ssm/hybrid) cannot be
+    rolled back to an accepted frontier, so the engine gates speculative
+    decoding off for those families.
+    """
+    from repro.core.quant import quantize_kv
+    from repro.models.layers import apply_rope, _qk_norm
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"speculative verify requires a pure-attention family, "
+            f"got {cfg.family!r}")
+    new_cache = dict(layer_cache)
+    in_dtype = x.dtype
+    b, t, _ = x.shape
+
+    h = apply_norm(p["attn_norm"], x, cfg)
+    q = mm(h, p["attn"]["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = mm(h, p["attn"]["wk"]).reshape(b, t, cfg.n_kv, cfg.head_dim)
+    v = mm(h, p["attn"]["wv"]).reshape(b, t, cfg.n_kv, cfg.head_dim)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["attn"]["q_norm"]["scale"], cfg.norm_eps)
+        k = _qk_norm(k, p["attn"]["k_norm"]["scale"], cfg.norm_eps)
+    qpos = position[:, None] + jnp.arange(t)[None, :]    # [B, T] absolute
+    if cfg.pos == "rope":
+        q = apply_rope(q, qpos, cfg)
+        k = apply_rope(k, qpos, cfg)
+
+    if block_tables is not None:
+        bs = layer_cache["k"].shape[1]
+        nbp = block_tables.shape[1]
+        logical = jnp.clip(qpos // bs, 0, nbp - 1)       # [B, T]
+        off = qpos % bs
+        phys = jnp.take_along_axis(block_tables, logical, axis=1)
+        gather = lambda pool: pool[block_tables].reshape(
+            (b, nbp * bs) + pool.shape[2:])
+        if quant_kv:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            kc = _paged_write_multi(layer_cache["k"], kq, phys, off)
+            vc = _paged_write_multi(layer_cache["v"], vq, phys, off)
+            ksc = _paged_write_multi(layer_cache["k_scale"], ks, phys, off)
+            vsc = _paged_write_multi(layer_cache["v_scale"], vs, phys, off)
+            new_cache.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+            kf = gather(kc).astype(jnp.float32) * gather(ksc)
+            vf = gather(vc).astype(jnp.float32) * gather(vsc)
+        else:
+            kc = _paged_write_multi(layer_cache["k"], k, phys, off)
+            vc = _paged_write_multi(layer_cache["v"], v, phys, off)
+            new_cache.update(k=kc, v=vc)
+            kf, vf = gather(kc), gather(vc)
+    else:
+        slot = qpos % cache_len                          # [B, T]
+        if quant_kv:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            kc = _ring_write_multi(layer_cache["k"], kq, slot)
+            vc = _ring_write_multi(layer_cache["v"], vq, slot)
+            ksc = _ring_write_multi(layer_cache["k_scale"], ks, slot)
+            vsc = _ring_write_multi(layer_cache["v_scale"], vs, slot)
+            new_cache.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+            kf = kc.astype(jnp.float32) * ksc
+            vf = vc.astype(jnp.float32) * vsc
+        else:
+            kc = _ring_write_multi(layer_cache["k"], k, slot)
+            vc = _ring_write_multi(layer_cache["v"], v, slot)
+            new_cache.update(k=kc, v=vc)
+            kf, vf = kc, vc
+
+    attn_out = _verify_attend(q, kf, vf, position, cfg, cache_len)
+    attn_out = mm(attn_out.reshape(b, t, cfg.q_dim), p["attn"]["wo"])
+    x = (x + attn_out).astype(in_dtype)
+
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    if cfg.family == "moe":
+        y, _ = moe_lib.apply_moe(p["moe"], h, cfg, mode=moe_mode)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg)
+    return (x + y).astype(in_dtype), new_cache
+
+
+def _ring_write_multi(cache, val, slot):
+    """Scatter T consecutive tokens per lane into the ring cache.
+
+    cache [B, S, KV, D(or 1)], val [B, T, KV, D], slot [B, T].  Slots are
+    distinct within a lane whenever T <= S (speculative lanes never wrap
+    — the engine's submit guard reserves prompt + max_new + k + 1 slots).
+    """
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b)[:, None], slot].set(
+        val.astype(cache.dtype), unique_indices=True,
+        indices_are_sorted=False)
+
+
+def _paged_write_multi(pool, val, phys, off):
+    """Scatter T tokens per lane through the block tables.
+
+    pool [NB, BS, KV, D(or 1)], val [B, T, KV, D], phys/off [B, T].
+    Masked lanes' tables point at the trash block, so duplicate
+    destinations are expected there — no ``unique_indices``.
+    """
+    b, t = phys.shape
+    flat = val.reshape((b * t,) + val.shape[2:])
+    return pool.at[phys.reshape(-1), off.reshape(-1)].set(
+        flat.astype(pool.dtype))
+
+
+def _verify_attend(q, k, v, position, cfg: ModelConfig, cache_len: int):
+    """Chunk-causal attention of T query tokens over the ring cache.
+
+    q: [B, T, H, Dh]; k, v: [B, S, KV, Dh] (f32).  All T tokens' KV is
+    already written, so slot contents correspond to ``final = position +
+    T - 1``; query t at absolute position ``qpos = position + t`` then
+    admits slots whose held position is in ``(qpos - window, qpos]`` —
+    which excludes the later tokens of this same chunk (held > qpos) and
+    reduces exactly to the single-token formula at T == 1."""
+    b, t, hh, dh = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = hh // kv
+    qg = q.reshape(b, t, kv, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+
+    slots = jnp.arange(s)[None, :]                       # [1, S]
+    final = (position + t - 1)[:, None]                  # [B, 1]
+    cur_slot = final % s
+    age = (cur_slot - slots) % s                         # 0 = newest
+    held = final - age                                   # [B, S] absolute
+    qpos = position[:, None] + jnp.arange(t)[None, :]    # [B, T]
+    window = cfg.window if cfg.window is not None else cache_len
+    valid = ((held[:, None, :] >= 0)
+             & (held[:, None, :] <= qpos[:, :, None])
+             & (held[:, None, :] > qpos[:, :, None] - window))  # [B, T, S]
+    scores = jnp.where(valid[:, None, None, :, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, hh, dh).astype(q.dtype)
+
+
 def _decode_attend(q, k, v, position, cfg: ModelConfig, cache_len: int):
     """Attention of one query token over the ring cache.
 

@@ -558,6 +558,132 @@ def decode_step(params, tokens, cache, cfg: ModelConfig,
     return logits, new_cache
 
 
+# ---------------------------------------------------------------------------
+# speculative decoding: fused k-step draft + multi-token verify
+# ---------------------------------------------------------------------------
+
+# Stream salts keep speculative RNG draws (draft sampling, acceptance
+# coin flips, residual resampling, bonus draws) on distinct key streams
+# from the engine's committed-token sampler, all derived from the same
+# (seed, uid, per-request sample index) triple so results are invariant
+# to pool layout and preemption.
+DRAFT_SALT = 0x0D_0A_F7
+ACCEPT_SALT = 0x0A_CC_E7
+RESAMPLE_SALT = 0x0E_55_1D
+BONUS_SALT = 0x0B_00_05
+
+
+@partial(jax.jit, static_argnames=("cfg", "quant_kv", "moe_mode"))
+def verify_step(params, tokens, cache, cfg: ModelConfig,
+                quant_kv: bool = False, moe_mode: str = "dense",
+                active_mask: Optional[jax.Array] = None,
+                block_tables: Optional[jax.Array] = None):
+    """Multi-token decode for speculative verification.
+
+    tokens [B, T] occupy absolute positions ``cache["length"] + t``.
+    Returns ``(logits [B, T, V], new cache)``: row i is the next-token
+    distribution after consuming ``tokens[:, :i+1]`` on top of the
+    cache, and KV is written (conservative precision) for all T
+    positions — overwriting whatever the draft pass left there.
+    ``length`` advances by T for active lanes; the speculative driver
+    resets it to the accepted frontier afterwards, which is the whole
+    rollback for the ring layout (stale slots beyond the frontier have
+    ``held < 0`` until they are rewritten in order).
+
+    Not valid for ``cfg.pos == "sinusoidal"`` — like ``decode_step``
+    this embeds with ``pos_offset=0``, but here T > 1 rows would get
+    positions 0..T-1 instead of a constant; the engine gates that off.
+    """
+    b, t = tokens.shape
+    position = cache["length"]
+    x = embed_tokens(params, tokens, cfg, pos_offset=0)
+    if cfg.pos == "learned":
+        qpos = position[:, None] + jnp.arange(t)[None, :]
+        x = jnp.take(params["embed"], tokens, axis=0) + \
+            params["pos_embed"][qpos]
+    cache_len = cache["layers"]["k"].shape[2]
+    if block_tables is not None:
+        cache_len = block_tables.shape[1] * cache["layers"]["k"].shape[2]
+
+    def body(x, inp):
+        p_l, cache_l = inp
+        y, new_cache_l = blk.block_apply_verify(
+            p_l, x, cfg, cache_l, position, cache_len,
+            moe_mode=moe_mode, quant_kv=quant_kv,
+            block_tables=block_tables)
+        return y, new_cache_l
+
+    segments = block_segments(params)
+    new_parts = []
+    offset = 0
+    for seg in segments:
+        n_seg = _segment_len(seg)
+        cache_seg = jax.tree_util.tree_map(
+            lambda a: a[offset:offset + n_seg], cache["layers"])
+        x, new_seg = jax.lax.scan(body, x, (seg, cache_seg))
+        new_parts.append(new_seg)
+        offset += n_seg
+    new_layers = _concat_segments(new_parts)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params, x, cfg)                   # [B, T, V]
+    if active_mask is None:
+        new_length = cache["length"] + t
+    else:
+        new_length = cache["length"] + t * active_mask.astype(jnp.int32)
+    return logits, {"length": new_length, "layers": new_layers}
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "quant_kv", "moe_mode",
+                                   "temperature", "seed"))
+def draft_tokens(params, tokens, cache, cfg: ModelConfig, k: int,
+                 quant_kv: bool = False, moe_mode: str = "dense",
+                 active_mask: Optional[jax.Array] = None,
+                 block_tables: Optional[jax.Array] = None,
+                 temperature: float = 0.0, seed: int = 0,
+                 uids: Optional[jax.Array] = None,
+                 indices: Optional[jax.Array] = None):
+    """Draft ``k`` tokens per lane in ONE jitted dispatch.
+
+    Python-unrolls k single-token decode steps (under the *draft* weight
+    tree) into a single program, sampling between steps: argmax at
+    ``temperature == 0``, else categorical with per-row keys
+    ``fold_in(fold_in(fold_in(PRNGKey(seed), uid), index + i),
+    DRAFT_SALT)`` so draft draws never collide with the committed-token
+    sampler's stream.  This is where the speculative speedup comes from
+    on the host backend: one dispatch (plus one verify dispatch) per
+    ~E[accepted]+1 tokens instead of one per token.
+
+    tokens: [B, 1] — the pending (committed-but-unfed) token.  Returns
+    ``(draft [B, k] int32, draft_logits [B, k, V], new cache)``.  Draft
+    KV lands at positions ``length .. length+k-1`` at draft precision;
+    the verify pass overwrites every one of those slots, so nothing
+    drafted ever survives in the cache.
+    """
+    drafted = []
+    qlogits = []
+    tok = tokens
+    for i in range(k):
+        logits, cache = decode_step(
+            params, tok, cache, cfg, quant_kv=quant_kv, moe_mode=moe_mode,
+            active_mask=active_mask, block_tables=block_tables)
+        if temperature <= 0.0:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            base = jax.random.PRNGKey(seed)
+
+            def draw(uid, idx, row):
+                key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.fold_in(base, uid), idx),
+                    DRAFT_SALT)
+                return jax.random.categorical(key, row / temperature)
+
+            nxt = jax.vmap(draw)(uids, indices + i, logits).astype(jnp.int32)
+        drafted.append(nxt)
+        qlogits.append(logits)
+        tok = nxt[:, None]
+    return (jnp.stack(drafted, axis=1), jnp.stack(qlogits, axis=1), cache)
+
+
 def greedy_generate(params, prompt, cfg: ModelConfig, max_new: int,
                     cache_len: Optional[int] = None,
                     quant_kv: bool = False):

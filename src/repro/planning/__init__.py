@@ -21,14 +21,16 @@ from repro.planning.cost import (
     PlanCost,
     Slo,
     calib_for_layer,
+    expected_tokens_per_round,
     kv_block_bytes,
     kv_pool_blocks,
     kv_token_bytes,
     policy_units,
+    speculative_round_seconds,
     unquantized_bytes,
 )
 from repro.planning.planner import Planner, PlanResult
-from repro.planning.spec import PlanRule, PlanSpec
+from repro.planning.spec import DraftSpec, PlanRule, PlanSpec
 from repro.planning.tap import ActivationTap
 
 __all__ = [
@@ -36,6 +38,7 @@ __all__ = [
     "Budgets",
     "CalibrationResult",
     "DecodeCostModel",
+    "DraftSpec",
     "PlanCost",
     "PlanRule",
     "PlanResult",
@@ -44,6 +47,7 @@ __all__ = [
     "Slo",
     "as_plan",
     "calib_for_layer",
+    "expected_tokens_per_round",
     "kv_block_bytes",
     "kv_pool_blocks",
     "kv_token_bytes",
@@ -51,6 +55,7 @@ __all__ = [
     "plan_from_arg",
     "policy_units",
     "resolve_plan",
+    "speculative_round_seconds",
     "run_calibration",
     "unquantized_bytes",
 ]

@@ -294,6 +294,53 @@ def unquantized_bytes(params, policy) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Self-speculative pricing (PlanSpec.draft: a bit-gap buys tokens/round)
+# ---------------------------------------------------------------------------
+
+
+def expected_tokens_per_round(acceptance: float, k: int) -> float:
+    """Expected committed tokens of one draft-k/verify round.
+
+    Greedy speculative sampling commits the longest draft prefix the
+    verifier agrees with, plus the verifier's own next token: with
+    per-position acceptance ``a``, that is ``sum_{i=0..k} a^i`` =
+    ``(1 - a^(k+1)) / (1 - a)`` — between 1 (every draft rejected, the
+    round still commits the verifier's correction) and ``k + 1``
+    (all-accept plus the bonus token)."""
+    a = min(max(float(acceptance), 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def speculative_round_seconds(
+    cost: "DecodeCostModel",
+    verify_units,
+    draft_units,
+    group_size: int,
+    fixed_bytes: int,
+    k: int,
+) -> float:
+    """Modeled seconds of one speculative round at ``cost.batch`` lanes.
+
+    The draft phase runs ``k`` single-token iterations under the draft
+    tree (its own, smaller, weight stream); the verify phase is ONE
+    iteration whose lookups carry ``batch * (k + 1)`` rows but whose
+    weight stream is the same conservative bytes a plain iteration
+    streams — the amortization speculative decoding banks on: DRAM
+    traffic per round is ``k * draft_bytes + verify_bytes`` for up to
+    ``k + 1`` committed tokens per lane."""
+    d_cycles = cost.cycles(draft_units)
+    d_bytes = cost.qbytes(draft_units, group_size) + fixed_bytes
+    t_draft = cost.iteration_seconds(d_cycles, d_bytes)
+    verify = dataclasses.replace(cost, batch=cost.batch * (k + 1))
+    v_cycles = verify.cycles(verify_units)
+    v_bytes = cost.qbytes(verify_units, group_size) + fixed_bytes
+    t_verify = verify.iteration_seconds(v_cycles, v_bytes)
+    return k * t_draft + t_verify
+
+
+# ---------------------------------------------------------------------------
 # KV-cache pricing (the third PlanSpec dimension: kv_bits buys concurrency)
 # ---------------------------------------------------------------------------
 

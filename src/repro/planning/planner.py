@@ -109,6 +109,8 @@ class Planner:
         self._act_scores = act_scores
         self.kv_tolerance = kv_tolerance
         self._kv_scores: Optional[dict] = None
+        # measured draft acceptance per (draft_bits, act_bits) — k-independent
+        self._draft_acceptance: dict = {}
         self._fixed_bytes: Optional[int] = None
         self.last: Optional[PlanResult] = None
 
@@ -151,6 +153,12 @@ class Planner:
         if plan.kv_bits == "auto":
             plan, kv_scores = self._resolve_kv(plan)
         if plan.mode != "auto":
+            if plan.draft == "auto":
+                # draft="auto" keeps the plan unsolved; the conservative
+                # policy is already determined, so strip the draft to
+                # materialize it for the acceptance probe and pricing
+                conservative = dataclasses.replace(plan, draft=None).to_policy(self.base)
+                plan = self._resolve_draft(plan, conservative, slo)
             policy = plan.to_policy(self.base)
             result = PlanResult(
                 spec=plan,
@@ -201,6 +209,8 @@ class Planner:
             kwargs["match_uniform"] = int(plan.weight_bits)
         policy, report = sens.calibrate_policy(self.params, self.cfg, self.base, **kwargs)
         solved = self._solved_spec(plan, report, slo)
+        if solved.draft == "auto":
+            solved = self._resolve_draft(solved, policy, slo)
         result = PlanResult(
             spec=solved,
             policy=policy,
@@ -227,6 +237,70 @@ class Planner:
         bits = 8 if self._kv_scores["relative"] <= self.kv_tolerance else 32
         solved = dataclasses.replace(plan, kv_bits=bits, quant_kv=bits == 8)
         return solved, self._kv_scores
+
+    #: ``draft="auto"`` search grid — aggressive bit widths the draft tree
+    #: may requantize to, and lookahead depths worth pricing.
+    DRAFT_BITS_GRID = (2, 3, 4)
+    DRAFT_K_GRID = (2, 3, 4, 6, 8)
+    #: modeled tokens/s must beat plain decode by this factor before the
+    #: planner commits a draft (draft=None is the honest answer otherwise)
+    DRAFT_MIN_GAIN = 1.02
+
+    def _resolve_draft(self, plan: PlanSpec, policy, slo: Optional[Slo]) -> PlanSpec:
+        """Resolve ``draft="auto"`` to a concrete DraftSpec (or None).
+
+        Grid search over (draft bits, lookahead k) maximizing modeled
+        accepted tokens/s: ``batch * E[tokens/round] / round_seconds``,
+        where the per-token acceptance of each bit width is *measured*
+        (greedy teacher-forced agreement against the conservative tree,
+        :func:`repro.serving.speculative.measure_acceptance`, cached — the
+        probe is k-independent so the grid reuses it across k) and rounds
+        are priced by :func:`~repro.planning.cost.speculative_round_seconds`
+        under the DRAM-aware model.  A candidate only wins if it beats
+        plain decode by ``DRAFT_MIN_GAIN``; otherwise the plan ships with
+        ``draft=None`` — speculating would slow this plan down.
+        """
+        from repro.planning.cost import (
+            expected_tokens_per_round,
+            policy_units,
+            speculative_round_seconds,
+        )
+        from repro.planning.spec import DraftSpec
+        from repro.serving.speculative import draft_policy, measure_acceptance
+
+        cost = dataclasses.replace(
+            self.cost, batch=slo.batch if slo is not None else self.cost.batch
+        )
+        fixed = self.fixed_bytes()
+        verify_units = policy_units(self.params, policy)
+        plain_secs = cost.iteration_seconds(
+            cost.cycles(verify_units), cost.qbytes(verify_units, policy.group_size) + fixed
+        )
+        plain_tps = cost.batch / plain_secs
+        abits = plan.act_bits
+        # probe on the same deterministic corpus the sensitivity probes use
+        if self._tokens is None:
+            self._tokens = sens.calibration_tokens(self.cfg.vocab)
+        prompt = [int(t) for t in self._tokens[0]]
+        best: Optional[tuple] = None  # (tps, DraftSpec)
+        for bits in self.DRAFT_BITS_GRID:
+            key = (int(bits), abits)
+            if key not in self._draft_acceptance:
+                self._draft_acceptance[key] = measure_acceptance(
+                    self.params, self.cfg, policy, bits, act_bits=abits, prompt=prompt
+                )
+            alpha = self._draft_acceptance[key]
+            d_units = policy_units(self.params, draft_policy(policy, DraftSpec(bits, abits, 1)))
+            for k in self.DRAFT_K_GRID:
+                secs = speculative_round_seconds(
+                    cost, verify_units, d_units, policy.group_size, fixed, k
+                )
+                tps = cost.batch * expected_tokens_per_round(alpha, k) / secs
+                if best is None or tps > best[0]:
+                    best = (tps, DraftSpec(int(bits), abits, k, acceptance=alpha))
+        if best is None or best[0] < plain_tps * self.DRAFT_MIN_GAIN:
+            return dataclasses.replace(plan, draft=None)
+        return dataclasses.replace(plan, draft=best[1])
 
     def _solved_spec(self, plan: PlanSpec, report, slo: Optional[Slo]) -> PlanSpec:
         assign = report.bits_by_unit

@@ -66,6 +66,89 @@ def _fmt_bits(bits: Optional[int], abits: Optional[int]) -> str:
 
 
 @dataclasses.dataclass(frozen=True)
+class DraftSpec:
+    """The draft half of a self-speculative plan.
+
+    Self-speculative decoding serves ONE weight tree under two plans:
+    ``k`` tokens are proposed per round with this aggressive low-bit
+    precision and verified in one batched multi-token forward under the
+    plan's own (conservative) precision.  ``acceptance`` records the
+    measured greedy acceptance rate from the solver's calibration batch
+    (None until a Planner measured it) — it feeds the expected
+    accepted-tokens/s objective, not the serving datapath.
+
+    Grammar token: ``q<b>[a<ab>]:k<k>`` (e.g. ``q2a8:k4``).
+    """
+
+    weight_bits: int = 4
+    act_bits: Optional[int] = None
+    k: int = 4
+    acceptance: Optional[float] = None
+
+    def __post_init__(self):
+        from repro.core.quant import SUPPORTED_ABITS, SUPPORTED_BITS
+
+        if self.weight_bits not in SUPPORTED_BITS:
+            raise ValueError(
+                f"draft weight_bits must be one of {SUPPORTED_BITS}, "
+                f"got {self.weight_bits}"
+            )
+        if self.act_bits is not None and self.act_bits not in SUPPORTED_ABITS:
+            raise ValueError(
+                f"draft act_bits must be one of {SUPPORTED_ABITS} or None, got {self.act_bits}"
+            )
+        if self.k < 1:
+            raise ValueError(f"draft k must be >= 1, got {self.k}")
+        if self.acceptance is not None and not 0.0 <= self.acceptance <= 1.0:
+            raise ValueError(f"draft acceptance must be in [0, 1], got {self.acceptance}")
+
+    def format(self) -> str:
+        return f"q{_fmt_bits(self.weight_bits, self.act_bits)}:k{self.k}"
+
+    @staticmethod
+    def parse(tok: str) -> "DraftSpec":
+        m = re.fullmatch(r"q([^:]+):k(\d+)", tok.strip())
+        if not m:
+            raise ValueError(f"bad draft token {tok!r} (expected q<b>[a<ab>]:k<k> or auto)")
+        bits, abits = _parse_bits_token(m.group(1))
+        if bits is None:
+            raise ValueError(f"draft token {tok!r} must pin weight bits")
+        return DraftSpec(weight_bits=bits, act_bits=abits, k=int(m.group(2)))
+
+    def to_json(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "weight_bits": int(self.weight_bits),
+            "act_bits": self.act_bits,
+            "k": int(self.k),
+        }
+        if self.acceptance is not None:
+            out["acceptance"] = float(self.acceptance)
+        return out
+
+    @staticmethod
+    def from_json(spec: Mapping[str, Any]) -> "DraftSpec":
+        return DraftSpec(
+            weight_bits=int(spec["weight_bits"]),
+            act_bits=(int(spec["act_bits"]) if spec.get("act_bits") is not None else None),
+            k=int(spec.get("k", 4)),
+            acceptance=(
+                float(spec["acceptance"]) if spec.get("acceptance") is not None else None
+            ),
+        )
+
+
+def _coerce_draft(val) -> Optional[Union[str, "DraftSpec"]]:
+    """None | "auto" | DraftSpec | grammar token | DraftSpec JSON dict."""
+    if val is None or val == "auto" or isinstance(val, DraftSpec):
+        return val
+    if isinstance(val, str):
+        return DraftSpec.parse(val)
+    if isinstance(val, Mapping):
+        return DraftSpec.from_json(val)
+    raise ValueError(f"draft must be None, 'auto', a DraftSpec, a q<b>[a<ab>]:k<k> token, or a JSON dict; got {val!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanRule:
     """One regex precision override: paths matching ``pattern`` serve at
     ``weight_bits`` (and ``act_bits`` activations when given).  A None
@@ -134,6 +217,12 @@ class PlanSpec:
     kv_bits: Optional[Union[int, str]] = None
     group_size: Optional[int] = None
     min_size: Optional[int] = None
+    # self-speculative draft plan: None (no speculation), "auto" (the
+    # Planner grid-solves (draft bits, k) for expected accepted tokens/s
+    # against a calibration-measured acceptance curve), or a concrete
+    # DraftSpec / "q<b>[a<ab>]:k<k>" token.  Joined the schema in PR 9;
+    # omitted from JSON when unset so older plan hashes are unchanged.
+    draft: Optional[Union[str, "DraftSpec"]] = None
     # solved allocation (None until a Planner ran)
     weights_per_unit: Optional[Mapping[str, Any]] = None
     acts_per_unit: Optional[Mapping[str, Any]] = None
@@ -167,6 +256,7 @@ class PlanSpec:
             raise ValueError(f"target_tps must be positive, got {self.target_tps}")
         if self.kv_bits not in (None, "auto", 8, 32):
             raise ValueError(f"kv_bits must be None, 'auto', 8, or 32, got {self.kv_bits!r}")
+        object.__setattr__(self, "draft", _coerce_draft(self.draft))
 
     # -- solved state -----------------------------------------------------
 
@@ -175,8 +265,10 @@ class PlanSpec:
         """Auto plans become solved once a Planner filled the per-unit
         assignment; uniform/rules plans are directly servable.  A
         ``kv_bits`` of ``"auto"`` keeps any plan unsolved — the Planner
-        must first probe KV sensitivity and pin a concrete 8 or 32."""
-        if self.kv_bits == "auto":
+        must first probe KV sensitivity and pin a concrete 8 or 32.  A
+        ``draft`` of ``"auto"`` likewise: the Planner must grid-solve
+        the (draft bits, k) pair against measured acceptance first."""
+        if self.kv_bits == "auto" or self.draft == "auto":
             return False
         return self.mode != "auto" or self.weights_per_unit is not None
 
@@ -200,7 +292,7 @@ class PlanSpec:
     def parse(spec: str) -> "PlanSpec":
         """Parse the legacy ``--bit-policy`` grammar into a PlanSpec.
 
-          uniform:<b>[a<ab>][,kv=8|32|auto]   one precision everywhere
+          uniform:<b>[a<ab>][,kv=...][,draft=...]   one precision everywhere
           rules:<regex>=<b>[a<ab>],...        per-path overrides
                                               (``default=``/``*=`` sets the
                                               fallback precision)
@@ -210,8 +302,11 @@ class PlanSpec:
 
         Auto options: ``prt=off|paper|measured``, ``maxseg=<n>``,
         ``a=<ab>``, ``kv=8|32|auto`` (KV-cache precision; ``auto`` probes
-        per-layer KV sensitivity), and ``slo=<tps>`` (derive the budgets
-        from a target decode tokens/s instead of the uniform reference).
+        per-layer KV sensitivity), ``slo=<tps>`` (derive the budgets
+        from a target decode tokens/s instead of the uniform reference),
+        and ``draft=q<b>[a<ab>]:k<k>|auto`` (self-speculative draft
+        plan; ``auto`` grid-solves the draft-bits/k pair on measured
+        acceptance).  ``kv=`` and ``draft=`` also apply to uniform mode.
         """
         kind, _, rest = spec.partition(":")
         if kind == "uniform":
@@ -222,10 +317,12 @@ class PlanSpec:
                 key, _, val = opt.partition("=")
                 if key == "kv":
                     kw["kv_bits"] = val if val == "auto" else int(val)
+                elif key == "draft":
+                    kw["draft"] = val if val == "auto" else DraftSpec.parse(val)
                 else:
                     raise ValueError(
                         f"unknown uniform option {opt!r} in {spec!r} "
-                        "(only kv=8|32|auto)")
+                        "(only kv=8|32|auto and draft=q<b>[a<ab>]:k<k>|auto)")
             return PlanSpec(mode="uniform", weight_bits=bits,
                             act_bits=abits, **kw)
         if kind == "rules":
@@ -276,6 +373,8 @@ class PlanSpec:
                     kw["kv_bits"] = val if val == "auto" else int(val)
                 elif key == "slo":
                     kw["target_tps"] = float(val)
+                elif key == "draft":
+                    kw["draft"] = val if val == "auto" else DraftSpec.parse(val)
                 else:
                     raise ValueError(f"unknown auto option {opt!r} in {spec!r}")
             return PlanSpec(**kw)
@@ -289,6 +388,8 @@ class PlanSpec:
             head = f"uniform:{_fmt_bits(self.weight_bits, self.act_bits)}"
             if self.kv_bits is not None:
                 head += f",kv={self.kv_bits}"
+            if self.draft is not None:
+                head += f",draft={self._fmt_draft()}"
             return head
         if self.mode == "rules":
             parts = [f"{r.pattern}={_fmt_bits(r.weight_bits, r.act_bits)}" for r in self.rules]
@@ -308,7 +409,12 @@ class PlanSpec:
             opts.append(f"kv={self.kv_bits}")
         if self.target_tps is not None:
             opts.append(f"slo={self.target_tps:g}")
+        if self.draft is not None:
+            opts.append(f"draft={self._fmt_draft()}")
         return ",".join([head] + opts)
+
+    def _fmt_draft(self) -> str:
+        return self.draft if isinstance(self.draft, str) else self.draft.format()
 
     # -- JSON round-trip --------------------------------------------------
 
@@ -339,6 +445,8 @@ class PlanSpec:
             val = getattr(self, key)
             if val is not None:
                 out[key] = val
+        if self.draft is not None:
+            out["draft"] = self.draft if isinstance(self.draft, str) else self.draft.to_json()
         if self.weights_per_unit is not None:
             out["weights_per_unit"] = _bits_to_json(self.weights_per_unit)
         if self.acts_per_unit is not None:
@@ -381,6 +489,7 @@ class PlanSpec:
             ),
             group_size=(int(spec["group_size"]) if spec.get("group_size") is not None else None),
             min_size=(int(spec["min_size"]) if spec.get("min_size") is not None else None),
+            draft=_coerce_draft(spec.get("draft")),
             weights_per_unit=(_bits_from_json(wpu) if wpu is not None else None),
             acts_per_unit=(_bits_from_json(apu) if apu is not None else None),
             calibration=(dict(cal) if cal is not None else None),

@@ -235,6 +235,36 @@ class BlockSpaceManager:
         self.free(uid)
         self.preemptions += 1
 
+    def truncate(self, uid: int, n_tokens: int) -> int:
+        """Shrink ``uid``'s table to cover exactly ``n_tokens`` tokens.
+
+        Speculative rollback: verify writes KV for all k+1 candidate
+        positions, so a rejection can leave granted blocks past the
+        accepted frontier.  Releases every table entry beyond
+        ``blocks_needed(n_tokens)`` (refcount-aware) and returns how many
+        entries were dropped — the engine trash-redirects that many table
+        tail slots on device.  The kept frontier block may hold stale
+        rows past the frontier; they are unreadable (validity admits only
+        held <= position) and are overwritten in order as the request
+        advances.
+        """
+        table = self._tables[uid]
+        keep = self.blocks_needed(n_tokens) if n_tokens > 0 else 0
+        dropped = len(table) - keep
+        if dropped <= 0:
+            return 0
+        for blk in table[keep:]:
+            self._ref[blk] -= 1
+            if self._ref[blk] == 0:
+                del self._ref[blk]
+                self._unregister(blk)
+                self._free.append(blk)
+        del table[keep:]
+        self._free.sort()
+        if self._shared.get(uid, 0) > keep:
+            self._shared[uid] = keep
+        return dropped
+
     # -- invariants / stats ----------------------------------------------
 
     def check_invariants(self) -> None:

@@ -117,12 +117,18 @@ class SloController:
         iter_seconds: Optional[Callable[[int], float]] = None,
         planned_tps: Optional[float] = None,
         plan_hit_rate: Optional[float] = None,
+        tokens_per_iter: float = 1.0,
     ):
         self.cfg = cfg or ControllerConfig()
         self.slo = slo
         self._iter_seconds = iter_seconds
         self.planned_tps = planned_tps
         self.plan_hit_rate = plan_hit_rate
+        # tokens each lane commits per scheduling quantum: 1 for plain
+        # decode; E[accepted + 1] under speculative decoding, where one
+        # "iteration" is a whole draft+verify round and the SLO's
+        # per-iteration budget must be priced per committed token
+        self.tokens_per_iter = float(tokens_per_iter)
         self.actions: Dict[str, int] = {a: 0 for a in ACTIONS}
         self.checks = 0
         self._window: deque = deque(maxlen=self.cfg.window)
@@ -148,7 +154,10 @@ class SloController:
         """
         if self.slo is None or self._iter_seconds is None:
             return None
-        budget = self.slo.seconds_per_iteration
+        # an SLO quotes tokens/s; one scheduling quantum delivers
+        # tokens_per_iter tokens per lane (1 plain, E[accepted+1] for a
+        # speculative round), so the latency budget scales with it
+        budget = self.slo.seconds_per_iteration * self.tokens_per_iter
         return self._iter_seconds(int(occupancy)) <= budget * (1 + _SLO_EPS)
 
     def batch_cap(self, pool: int, free_cap: Optional[int] = None) -> int:
@@ -297,6 +306,7 @@ class SloController:
         iter_seconds: Optional[Callable[[int], float]] = None,
         planned_tps: Optional[float] = None,
         plan_hit_rate: Optional[float] = None,
+        tokens_per_iter: Optional[float] = None,
     ) -> None:
         """The engine swapped plans: re-anchor drift against the new
         model and recompute the occupancy cap on next use."""
@@ -306,6 +316,8 @@ class SloController:
             self.planned_tps = planned_tps
         if plan_hit_rate is not None:
             self.plan_hit_rate = plan_hit_rate
+        if tokens_per_iter is not None:
+            self.tokens_per_iter = float(tokens_per_iter)
         self._anchor_scale = None
         self._last_drift = None
         self._oob = 0

@@ -72,6 +72,7 @@ KV precision is plan-driven: a ``PlanSpec.kv_bits`` of 8/32 (or
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
@@ -84,6 +85,21 @@ from repro.core.scheduler import DECODE, IterationScheduler, Request
 from repro.models import lm
 from repro.models.common import ModelConfig
 from repro.models.sail_linear import QuantPolicy, quantize_params
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "temperature"))
+def _sample_rows_jit(logits, uids, indices, seed: int, temperature: float):
+    """One categorical draw per row under a per-row key folded from
+    (engine seed, request uid, per-request sample index) — sampling that
+    depends only on WHICH token of WHICH request is being drawn, never on
+    global iteration count or batch composition."""
+    base = jax.random.PRNGKey(seed)
+
+    def draw(uid, idx, row):
+        key = jax.random.fold_in(jax.random.fold_in(base, uid), idx)
+        return jax.random.categorical(key, row / temperature)
+
+    return jax.vmap(draw)(uids, indices, logits)
 
 
 @dataclasses.dataclass
@@ -125,6 +141,11 @@ class EngineConfig:
     bit_policy: Any = None
     eos_token: int = -1            # -1: never stop early
     temperature: float = 0.0       # 0 = greedy
+    # PRNG root for temperature>0 sampling.  Tokens are drawn with a key
+    # folded from (seed, request uid, per-request sample index), so a
+    # request's sampled sequence is invariant to batch composition,
+    # sheds, preemption/resume, and slot-vs-paged pool layout.
+    seed: int = 0
     mode: str = "continuous"       # "continuous" | "batch" (run-to-completion)
     prefill_budget: Optional[int] = None  # new prefill tokens per iteration
     prompt_bucket: int = 16        # prompts padded to a multiple (compile reuse)
@@ -329,6 +350,37 @@ class Engine:
                 self.cache = lm.init_cache(self.params, cfg,
                                            ecfg.batch_size, clen,
                                            self._quant_kv)
+        # self-speculative decoding: the plan's draft= sub-spec requants
+        # the SAME raw tree aggressively; the draft tree stays resident
+        # alongside the conservative one for the engine's lifetime
+        self.spec_decoder = None
+        draft = self.plan.draft if self.plan is not None else None
+        if draft is not None:
+            from repro import planning
+            from repro.serving.speculative import SpeculativeDecoder
+            if not isinstance(draft, planning.DraftSpec):
+                raise ValueError(
+                    "plan.draft is unresolved ('auto') — solve the plan "
+                    "(Planner / resolve_plan with an SLO) before serving")
+            if ecfg.mode != "continuous":
+                raise ValueError("speculative decoding (plan draft=) "
+                                 "requires mode='continuous'")
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    "speculative decoding needs a pure-attention family "
+                    "— recurrent state cannot roll back to the accepted "
+                    f"frontier (family={cfg.family!r})")
+            if cfg.pos == "sinusoidal":
+                raise ValueError(
+                    "speculative decoding does not support sinusoidal "
+                    "positions (multi-token verify embeds at "
+                    "pos_offset=0, like decode_step)")
+            if self.tap is not None:
+                raise ValueError(
+                    "speculative decoding and an ActivationTap cannot "
+                    "coexist — the round bypasses the tapped decode step")
+            self.spec_decoder = SpeculativeDecoder(
+                params, cfg, draft, self.quant_policy)
         if ecfg.controller:
             if ecfg.mode != "continuous":
                 warnings.warn(
@@ -345,7 +397,10 @@ class Engine:
                                   if self._plan_units is not None
                                   else None),
                     planned_tps=self.planned_tps(),
-                    plan_hit_rate=self.prt_hit_rate)
+                    plan_hit_rate=self.prt_hit_rate,
+                    tokens_per_iter=(self.spec_decoder.expected_tokens()
+                                     if self.spec_decoder is not None
+                                     else 1.0))
 
     # --- client API -------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int,
@@ -355,8 +410,12 @@ class Engine:
         ``on_token(uid, token)`` (optional) is invoked as each generated
         token is committed — the streaming hook.
         """
+        # speculative rounds write k extra candidate positions past the
+        # committed frontier; lanes must never wrap over them
+        spec_extra = (self.spec_decoder.k + 1
+                      if self.spec_decoder is not None else 0)
         if self.paged:
-            need = len(prompt) + max_new_tokens
+            need = len(prompt) + max_new_tokens + spec_extra
             room = self._mbs * int(self.ecfg.kv_block_size)
             if need > room:
                 raise ValueError(
@@ -364,13 +423,21 @@ class Engine:
                     f"holds {room} ({self._mbs} blocks x "
                     f"{self.ecfg.kv_block_size}) — paged lanes never "
                     "wrap; raise cache_len or shorten the request")
+        elif spec_extra and self.ecfg.mode == "continuous":
+            need = len(prompt) + max_new_tokens + spec_extra
+            if need > self._clen:
+                raise ValueError(
+                    f"request needs {need} KV positions (prompt + "
+                    f"max_new + draft lookahead) but the ring holds "
+                    f"{self._clen} — speculative rollback forbids ring "
+                    "wrap; raise cache_len or shorten the request")
         self._uid += 1
         self.sched.submit(Request(uid=self._uid, prompt_len=len(prompt),
                                   max_new_tokens=max_new_tokens,
-                                  arrived_at=time.time()))
+                                  arrived_at=time.perf_counter()))
         self._orig_plen[self._uid] = len(prompt)
         self._gen[self._uid] = list(prompt)
-        self._t0[self._uid] = time.time()
+        self._t0[self._uid] = time.perf_counter()
         if on_token is not None:
             self._on_token[self._uid] = on_token
         return self._uid
@@ -422,12 +489,19 @@ class Engine:
                 self._finish(req)
         # one masked decode iteration serves every still-active slot
         active = list(self.sched.running)
+        spec = self.spec_decoder
         if self.paged and active:
-            # every active lane appends one KV position this iteration:
-            # grant it a block slot first (COW off shared blocks, preempt
-            # the newest arrival when the pool runs dry)
-            active = self._ensure_append_blocks(active)
+            # every active lane appends one KV position this iteration
+            # (k+1 for a speculative round: k drafts re-written by
+            # verify, plus the bonus slot): grant block slots first (COW
+            # off shared blocks, preempt the newest when the pool runs
+            # dry)
+            active = self._ensure_append_blocks(
+                active, n=(spec.k + 1) if spec is not None else 1)
         self.peak_active = max(self.peak_active, len(active))
+        if spec is not None and active:
+            self._speculative_round(active, ctl)
+            return not self.sched.idle()
         if active:
             mask = np.zeros((self.ecfg.batch_size,), bool)
             for req in active:
@@ -449,7 +523,12 @@ class Engine:
                 logits, self.cache = out
             self.iterations += 1
             self.decode_iterations += 1
-            nxt = self._sample(logits)
+            uids = np.zeros((self.ecfg.batch_size,), np.uint32)
+            sidx = np.zeros((self.ecfg.batch_size,), np.uint32)
+            for req in active:
+                uids[req.slot] = req.uid
+                sidx[req.slot] = self._sample_index(req.uid)
+            nxt = self._sample(logits, uids, sidx)
             # _sample's np.asarray blocks on the device, so dt covers the
             # whole iteration (incl. any tap-capture sync)
             dt = time.perf_counter() - t0
@@ -513,12 +592,14 @@ class Engine:
         self.block_mgr.allocate(req.uid, prompt)
         return True
 
-    def _ensure_append_blocks(self,
-                              active: List[Request]) -> List[Request]:
-        """Grant every active lane a physical slot for this iteration's
-        KV write: in-place into its frontier block, a fresh block at a
+    def _ensure_append_blocks(self, active: List[Request],
+                              n: int = 1) -> List[Request]:
+        """Grant every active lane physical slots for this iteration's
+        KV writes: in-place into its frontier block, a fresh block at a
         block boundary, or a copy-on-write split off a shared block.
-        When the pool runs dry the newest arrival is preempted
+        ``n`` > 1 (speculative rounds) grants a RANGE of consecutive
+        positions up front — the draft writes k of them and verify all
+        n.  When the pool runs dry the newest arrival is preempted
         (recompute-style) and the grant retried.  Returns the requests
         that still decode this iteration; COW copies are applied to the
         device pool in one batched scatter."""
@@ -529,27 +610,31 @@ class Engine:
         for req in active:
             if req.uid in preempted:
                 continue
-            while True:
-                pos = int(self._len_np[req.slot])
-                res = self.block_mgr.append_slot(req.uid, pos)
-                if res is not None:
-                    kind, src, dst = res
-                    if kind in ("alloc", "cow"):
-                        self._tables_np[req.slot, pos // bs] = dst
-                    if kind == "cow":
-                        cows.append((src, dst))
-                    granted.append(req)
+            for j in range(n):
+                if req.uid in preempted:
                     break
-                victim = self._pick_victim()
-                if victim is None:
-                    raise MemoryError(
-                        "KV block pool exhausted and preemption is "
-                        "disabled (EngineConfig.preempt=False) — grow "
-                        "kv_pool_blocks/kv_budget_bytes")
-                self._preempt(victim)
-                preempted.add(victim.uid)
-                if victim is req:
-                    break
+                pos = int(self._len_np[req.slot]) + j
+                while True:
+                    res = self.block_mgr.append_slot(req.uid, pos)
+                    if res is not None:
+                        kind, src, dst = res
+                        if kind in ("alloc", "cow"):
+                            self._tables_np[req.slot, pos // bs] = dst
+                        if kind == "cow":
+                            cows.append((src, dst))
+                        break
+                    victim = self._pick_victim()
+                    if victim is None:
+                        raise MemoryError(
+                            "KV block pool exhausted and preemption is "
+                            "disabled (EngineConfig.preempt=False) — grow "
+                            "kv_pool_blocks/kv_budget_bytes")
+                    self._preempt(victim)
+                    preempted.add(victim.uid)
+                    if victim is req:
+                        break
+            if req.uid not in preempted:
+                granted.append(req)
         if cows:
             src = jnp.asarray(np.asarray([s for s, _ in cows], np.int32))
             dst = jnp.asarray(np.asarray([d for _, d in cows], np.int32))
@@ -586,6 +671,108 @@ class Engine:
         ev["preempted_iteration"] = self.iterations
 
     # --- continuous internals ---------------------------------------------
+    def _speculative_round(self, active: List[Request], ctl) -> None:
+        """One self-speculative round: fused k-token draft under the
+        aggressive tree, one batched (k+1)-token verify under the
+        conservative tree, then commit-accepted / rollback-rejected (see
+        ``repro.serving.speculative``).
+
+        The accepted prefix is committed token by token with the same
+        EOS/max-new checks as the top-of-step commit; the round's
+        correction (first rejection) or bonus (all accepted) token
+        becomes the new pending ``_cur``.  Rollback is one device write
+        of per-lane lengths back to the accepted frontier — verify
+        already overwrote every draft KV slot at conservative precision,
+        and slots past the frontier are unreadable (held > position)
+        until rewritten in order — plus a paged block-table truncation.
+        """
+        spec = self.spec_decoder
+        k = spec.k
+        bsz = self.ecfg.batch_size
+        mask = np.zeros((bsz,), bool)
+        uids = np.zeros((bsz,), np.uint32)
+        sidx = np.zeros((bsz,), np.uint32)
+        for req in active:
+            mask[req.slot] = True
+            uids[req.slot] = req.uid
+            sidx[req.slot] = self._sample_index(req.uid)
+        prev_len = np.asarray(self.cache["length"]).copy()
+        amask = jnp.asarray(mask)
+        tables = jnp.asarray(self._tables_np) if self.paged else None
+        temp = self.ecfg.temperature
+        t0 = time.perf_counter()
+        d_toks, d_logits, self.cache = lm.draft_tokens(
+            spec.draft_params, jnp.asarray(self._cur[:, None]),
+            self.cache, self.cfg, k, quant_kv=self._quant_kv,
+            active_mask=amask, block_tables=tables, temperature=temp,
+            seed=self.ecfg.seed, uids=jnp.asarray(uids),
+            indices=jnp.asarray(sidx))
+        draft_np = np.asarray(d_toks)
+        # rewind: verify re-feeds the round from its first position
+        self.cache["length"] = jnp.asarray(prev_len)
+        vt = np.concatenate([self._cur[:, None], draft_np], axis=1)
+        v_logits, self.cache = lm.verify_step(
+            self.params, jnp.asarray(vt), self.cache, self.cfg,
+            quant_kv=self._quant_kv, active_mask=amask,
+            block_tables=tables)
+        n_acc, nxt = spec.accept(
+            draft_np, np.asarray(v_logits),
+            np.asarray(d_logits) if temp > 0 else None,
+            temperature=temp, seed=self.ecfg.seed, uids=uids,
+            indices=sidx)
+        # np.asarray above blocked on the device: dt is the whole round
+        dt = time.perf_counter() - t0
+        self.iterations += 1
+        self.decode_iterations += 1
+        produced = 0
+        # rule-level acceptance (draft quality): lanes that hit max_new or
+        # EOS mid-prefix truncate the COMMIT, not the acceptance stat —
+        # conflating them would bias assumed_acceptance() low and misprice
+        # expected tokens/round for the controller
+        accepted_total = int(n_acc[mask].sum())
+        new_len = prev_len.astype(np.int64).copy()
+        for req in active:
+            s, uid = req.slot, req.uid
+            self.events[uid].setdefault("first_decode_iteration",
+                                        self.iterations)
+            finished = False
+            for j in range(int(n_acc[s])):
+                tok = int(draft_np[s, j])
+                self._gen[uid].append(tok)
+                req.generated += 1
+                produced += 1
+                cb = self._on_token.get(uid)
+                if cb is not None:
+                    cb(uid, tok)
+                if (tok == self.ecfg.eos_token
+                        or req.generated >= req.max_new_tokens):
+                    finished = True
+                    break
+            new_len[s] = len(self._gen[uid])
+            if finished:
+                self._finish(req)
+                continue
+            # correction (first rejection) or bonus (all accepted)
+            self._cur[s] = int(nxt[s])
+            produced += 1
+            if self.paged:
+                dropped = self.block_mgr.truncate(uid, int(new_len[s]))
+                if dropped:
+                    keep = len(self.block_mgr.table(uid))
+                    self._tables_np[s, keep:keep + dropped] = self._trash
+                self._len_np[s] = int(new_len[s])
+        # one device write rolls every lane back to its accepted frontier
+        self.cache["length"] = jnp.asarray(new_len.astype(np.int32))
+        self.decode_seconds += dt
+        self._decode_tokens += produced
+        exp = self._modeled_iter_seconds(len(active))
+        if exp is not None:
+            self.modeled_seconds += exp
+        spec.note_round(len(active), accepted_total)
+        if ctl is not None and ctl.observe(len(active), dt,
+                                           self.decode_iterations):
+            self._controller_step()
+
     def _padded_len(self, req: Request) -> int:
         # recurrent families (ssm/hybrid) fold every input token into the
         # state, so right-padding would pollute it — prefill exact-length;
@@ -641,8 +828,10 @@ class Engine:
         self.iterations += 1
         self.prefill_iterations += 1
         self.prefill_tokens += int(lengths.sum())
-        first = self._sample(logits)
-        now = time.time()
+        first = self._sample(
+            logits, [req.uid for req in reqs],
+            [self._sample_index(req.uid) for req in reqs])
+        now = time.perf_counter()
         for i, req in enumerate(reqs):
             self._cur[req.slot] = int(first[i])
             # preserved across preemption: TTFT is submit -> FIRST token
@@ -667,7 +856,7 @@ class Engine:
                                                      req.prompt_len):]
         self.completions[req.uid] = Completion(
             uid=req.uid, tokens=gen,
-            latency_s=time.time() - self._t0[req.uid],
+            latency_s=time.perf_counter() - self._t0[req.uid],
             ttft_s=self._ttft.get(req.uid, 0.0))
         self.events[req.uid]["finished_iteration"] = self.iterations
 
@@ -692,8 +881,9 @@ class Engine:
         self.iterations += 1
         self.prefill_iterations += 1
         self.prefill_tokens += int(lengths.sum())
-        cur = self._sample(logits)
-        now = time.time()
+        cur = self._sample(logits, [r.uid for r in batch],
+                           [self._sample_index(r.uid) for r in batch])
+        now = time.perf_counter()
         for r in batch:
             self._ttft[r.uid] = now - self._t0[r.uid]
         # iteration loop: one decode step serves the whole batch
@@ -720,12 +910,14 @@ class Engine:
                 quant_kv=self._quant_kv)
             self.iterations += 1
             self.decode_iterations += 1
-            cur = self._sample(logits)
+            cur = self._sample(logits, [r.uid for r in active],
+                               [self._sample_index(r.uid)
+                                for r in active])
         for r in active:
             gen = self._gen[r.uid][r.prompt_len:]
             self.completions[r.uid] = Completion(
                 uid=r.uid, tokens=gen,
-                latency_s=time.time() - self._t0[r.uid],
+                latency_s=time.perf_counter() - self._t0[r.uid],
                 ttft_s=self._ttft.get(r.uid, 0.0))
         self.sched.step_complete([r.uid for r in active])
         # mark any remaining (shouldn't happen in sync mode)
@@ -753,31 +945,50 @@ class Engine:
         return planning.DecodeCostModel(**kw)
 
     def _modeled_iter_seconds(self, occupancy: int) -> Optional[float]:
-        """Modeled seconds of one masked decode iteration at the given
+        """Modeled seconds of one scheduling quantum at the given
         occupancy (memoized per plan; lookup cycles scale with batch, so
-        this is nondecreasing — the controller's feasibility curve)."""
+        this is nondecreasing — the controller's feasibility curve).
+
+        Plain decode: one masked iteration.  Speculative: one whole
+        round, ``k * t_draft + t_verify`` — t_draft under the aggressive
+        tree's units, t_verify at batch x (k+1) token positions under
+        the conservative units (``planning.speculative_round_seconds``).
+        The plan hash in the memo key covers the draft sub-spec."""
         if self._plan_units is None:
             return None
         key = (self.plan.spec_hash if self.plan is not None else None,
                int(occupancy))
         got = self._iter_cache.get(key)
         if got is None:
+            from repro import planning
             cost = self._plan_cost_model(occupancy)
-            cycles = cost.cycles(self._plan_units)
-            total = (cost.qbytes(self._plan_units,
-                                 self.quant_policy.group_size)
-                     + self._plan_fixed_bytes)
-            got = cost.iteration_seconds(cycles, total)
+            if self.spec_decoder is not None:
+                got = planning.speculative_round_seconds(
+                    cost, self._plan_units, self.spec_decoder.draft_units,
+                    self.quant_policy.group_size, self._plan_fixed_bytes,
+                    self.spec_decoder.k)
+            else:
+                cycles = cost.cycles(self._plan_units)
+                total = (cost.qbytes(self._plan_units,
+                                     self.quant_policy.group_size)
+                         + self._plan_fixed_bytes)
+                got = cost.iteration_seconds(cycles, total)
             self._iter_cache[key] = got
         return got
 
     def planned_tps(self, batch: Optional[int] = None) -> Optional[float]:
         """Modeled decode tokens/s of the served plan at ``batch``
         occupancy (default: the full pool) — the reference side of
-        ``stats()["drift"]``.  None when serving unquantized."""
+        ``stats()["drift"]``.  None when serving unquantized.  Under
+        speculative decoding one quantum commits E[accepted + 1] tokens
+        per lane, so throughput scales by the acceptance curve."""
         b = self.ecfg.batch_size if batch is None else int(batch)
         secs = self._modeled_iter_seconds(b)
-        return None if secs is None else b / max(secs, 1e-30)
+        if secs is None:
+            return None
+        tpi = (self.spec_decoder.expected_tokens()
+               if self.spec_decoder is not None else 1.0)
+        return b * tpi / max(secs, 1e-30)
 
     def measured_tps(self) -> Optional[float]:
         """Measured decode-phase tokens/s over the whole run (tokens
@@ -892,12 +1103,27 @@ class Engine:
             self.slo = planning.Slo(spec.target_tps,
                                     batch=spec.slo_batch
                                     or self.ecfg.batch_size)
+        # draft sub-spec hot-swap: requantize the draft tree when the new
+        # plan drafts differently, or drop it when the plan stopped
+        # speculating (the pending _cur token carries over either way)
+        draft = spec.draft if isinstance(spec.draft, planning.DraftSpec) \
+            else None
+        if draft is None:
+            self.spec_decoder = None
+        elif (self.spec_decoder is None
+              or self.spec_decoder.spec != draft):
+            from repro.serving.speculative import SpeculativeDecoder
+            self.spec_decoder = SpeculativeDecoder(
+                self._raw_params, self.cfg, draft, policy)
         if self.controller is not None:
             self.controller.slo = self.slo
             self.controller.plan_changed(
                 iter_seconds=self._modeled_iter_seconds,
                 planned_tps=self.planned_tps(),
-                plan_hit_rate=self.prt_hit_rate)
+                plan_hit_rate=self.prt_hit_rate,
+                tokens_per_iter=(self.spec_decoder.expected_tokens()
+                                 if self.spec_decoder is not None
+                                 else 1.0))
 
     def replan(self, planner=None, resolve: bool = False):
         """Online recalibration from live traffic (ROADMAP: "PRT hit
@@ -933,12 +1159,31 @@ class Engine:
         return result
 
     # --- shared -----------------------------------------------------------
-    def _sample(self, logits) -> np.ndarray:
+    def _sample_index(self, uid: int) -> int:
+        """Per-request sample counter: how many tokens this request has
+        had sampled AND committed so far (0 at the prefill sample).
+        Derived from committed state only, so it is invariant to batch
+        composition, iteration count, preemption/resume (the resumed
+        re-prefill re-samples the pending token under its original
+        index), and slot-vs-paged pool layout."""
+        return len(self._gen[uid]) - self._orig_plen.get(uid, 0)
+
+    def _sample(self, logits, uids=None, indices=None) -> np.ndarray:
+        """Sample one token per logits row.
+
+        ``uids``/``indices`` carry each row's (request uid, per-request
+        sample index); rows without a live request (masked slots) pass
+        uid 0 and their draws are discarded by the caller.  Greedy
+        ignores them entirely."""
         if self.ecfg.temperature <= 0:
             return np.asarray(jnp.argmax(logits, axis=-1))
-        key = jax.random.PRNGKey(self.iterations)
-        return np.asarray(jax.random.categorical(
-            key, logits / self.ecfg.temperature, axis=-1))
+        if uids is None:
+            uids = np.zeros((logits.shape[0],), np.uint32)
+            indices = np.zeros((logits.shape[0],), np.uint32)
+        return np.asarray(_sample_rows_jit(
+            logits, jnp.asarray(np.asarray(uids, np.uint32)),
+            jnp.asarray(np.asarray(indices, np.uint32)),
+            self.ecfg.seed, self.ecfg.temperature))
 
     def stats(self) -> Dict[str, Any]:
         lats = [c.latency_s for c in self.completions.values()]
@@ -953,7 +1198,7 @@ class Engine:
         # true occupancy) raw ratio — absolute value is only meaningful
         # when the plan carries host calibration (plan_calibrated);
         # the controller's internal drift is anchor-normalized.
-        ref = modeled if modeled else planned
+        ref = modeled if modeled is not None else planned
         drift = (measured / ref - 1.0
                  if measured is not None and ref else None)
         return {"requests": len(self.completions),
@@ -970,6 +1215,11 @@ class Engine:
                 "kv_bits": self.kv_bits,
                 "block_pool": (self.block_mgr.stats()
                                if self.paged else None),
+                # self-speculative decoding: draft plan, rounds,
+                # acceptance rate (None when not speculating)
+                "speculative": (self.spec_decoder.stats()
+                                if self.spec_decoder is not None
+                                else None),
                 "iterations": self.iterations,
                 "prefill_iterations": self.prefill_iterations,
                 "decode_iterations": self.decode_iterations,

@@ -1,0 +1,260 @@
+"""Self-speculative decoding: two precision plans over ONE weight tree.
+
+SAIL's LUT-GEMV makes precision a *serving-time* knob: the same raw
+weight tree quantizes to any bit width, and lower bits stream fewer
+bytes per token.  That makes the classic draft-model speculative-decoding
+recipe free of a second model: the *draft* is the same network
+requantized aggressively (e.g. q4 when the conservative plan serves q8),
+resident alongside the served tree — no ``apply_plan`` thrash, no extra
+architecture.
+
+One speculative **round** per engine iteration:
+
+1. **draft** — ``lm.draft_tokens`` runs k single-token decode steps under
+   the draft tree fused into ONE jitted dispatch, sampling between steps
+   (argmax when greedy, else categorical on the DRAFT_SALT key stream).
+   Draft KV lands in the shared cache at draft precision.
+2. **verify** — ``lm.verify_step`` feeds the pending token plus all k
+   drafts through the conservative tree in one batched multi-token
+   forward, overwriting every draft-written KV slot with conservative
+   KV.  Row i is the target distribution for draft i+1; row k prices the
+   bonus token.
+3. **accept / rollback** — the standard speculative-sampling rule
+   (:meth:`SpeculativeDecoder.accept`): exact argmax equality in greedy
+   mode; the p/q coin-flip with residual resampling at temperature > 0,
+   on key streams salted so they never collide with the engine's
+   committed-token sampler.  The engine commits the accepted prefix,
+   resets per-lane cache lengths to the accepted frontier (the whole
+   rollback for the ring layout), and truncates paged block-table tails
+   via ``BlockSpaceManager.truncate``.
+
+Where the speedup comes from: a round commits E[accepted]+1 tokens for
+2 dispatches (draft + verify) instead of 1 dispatch per token, amortizing
+per-iteration fixed costs — dispatch, host-side sampling and scheduling
+— and, on the paper's machine, streaming the conservative weights once
+per k+1 tokens instead of once per token.  The planner prices the
+draft/verify bit gap with ``planning.speculative_round_seconds`` against
+a *measured* acceptance curve (:func:`measure_acceptance`).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.sail_linear import QuantPolicy, quantize_params
+
+#: planning-time acceptance assumed before anything is measured — the
+#: q4-vs-q8 teacher-forced agreement measured on the smoke model (~0.83)
+#: rounded down; a DraftSpec.acceptance or measured curve overrides it.
+DEFAULT_ACCEPTANCE = 0.8
+
+
+def draft_policy(base: QuantPolicy, draft) -> QuantPolicy:
+    """The draft tree's quantization policy: uniform at the DraftSpec's
+    aggressive bits, inheriting the conservative policy's grouping knobs
+    (so both trees index the same LUT machinery)."""
+    return QuantPolicy(
+        bits=draft.weight_bits,
+        group_size=base.group_size,
+        min_size=base.min_size,
+        skip_embed=base.skip_embed,
+        codebook=base.codebook,
+        act_bits=draft.act_bits,
+    )
+
+
+def _softmax(x: np.ndarray) -> np.ndarray:
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def _stream_uniform(seed: int, uid: int, idx: int, salt: int) -> float:
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed),
+                                              int(uid)), int(idx)), salt)
+    return float(jax.random.uniform(key))
+
+
+def _stream_categorical(seed: int, uid: int, idx: int, salt: int,
+                        probs: np.ndarray) -> int:
+    """Inverse-CDF draw from ``probs`` on the salted per-request stream
+    (host-side; B is small and V is the smoke vocab on this path)."""
+    u = _stream_uniform(seed, uid, idx, salt)
+    return int(min(np.searchsorted(np.cumsum(probs), u),
+                   len(probs) - 1))
+
+
+class SpeculativeDecoder:
+    """Holds the draft weight tree and the acceptance machinery.
+
+    Constructed by the engine while the raw f32 tree is in hand (the
+    engine may drop it afterwards); the draft tree stays resident for
+    the engine's lifetime — requantizing per round would defeat the
+    point.  ``draft_units`` are captured for the cost model so the
+    planner and controller can price ``t_draft`` without the raw tree.
+    """
+
+    def __init__(self, raw_params, cfg, draft, base_policy: QuantPolicy):
+        from repro import planning
+        self.cfg = cfg
+        self.spec = draft                    # planning.DraftSpec
+        self.k = int(draft.k)
+        self.policy = draft_policy(base_policy, draft)
+        self.draft_units = planning.policy_units(raw_params, self.policy)
+        self.draft_params, _, _ = quantize_params(raw_params, self.policy)
+        # counters behind stats()["speculative"]
+        self.rounds = 0
+        self.drafted = 0
+        self.accepted = 0
+
+    # -- planning-side numbers --------------------------------------------
+
+    def assumed_acceptance(self) -> float:
+        """Per-token acceptance used for pricing: the DraftSpec's
+        measured/solved value when present, the running measurement once
+        rounds have accumulated, else the default."""
+        if self.drafted >= 64:
+            return self.accepted / self.drafted
+        if self.spec.acceptance is not None:
+            return float(self.spec.acceptance)
+        return DEFAULT_ACCEPTANCE
+
+    def expected_tokens(self) -> float:
+        from repro.planning import expected_tokens_per_round
+        return expected_tokens_per_round(self.assumed_acceptance(), self.k)
+
+    # -- accept / rollback -------------------------------------------------
+
+    def accept(self, draft: np.ndarray, verify_logits: np.ndarray,
+               draft_logits: Optional[np.ndarray],
+               temperature: float = 0.0, seed: int = 0,
+               uids: Optional[np.ndarray] = None,
+               indices: Optional[np.ndarray] = None):
+        """The speculative-sampling acceptance rule, vectorized over lanes.
+
+        draft: [B, k] drafted tokens.  verify_logits: [B, k+1, V] from the
+        conservative tree (row i conditions on the pending token plus
+        drafts 0..i-1).  Returns ``(n_acc [B], next_tok [B])``: the
+        accepted prefix length per lane and the round's new pending token
+        (the correction resampled at the first rejection, or the bonus
+        draw when everything was accepted).
+
+        Greedy (temperature == 0) degenerates to exact argmax equality —
+        the draft is deterministic, so accept iff it matches what the
+        conservative tree would have produced; the output token sequence
+        is then identical to non-speculative decode.
+        """
+        b, k = draft.shape
+        if temperature <= 0.0:
+            targets = np.argmax(verify_logits, axis=-1)        # [B, k+1]
+            matches = draft == targets[:, :k]
+            n_acc = np.where(matches.all(axis=1), k,
+                             np.argmin(matches, axis=1)).astype(np.int64)
+            next_tok = targets[np.arange(b), n_acc]
+            return n_acc, next_tok
+        p = _softmax(verify_logits.astype(np.float64) / temperature)
+        q = _softmax(draft_logits.astype(np.float64) / temperature)
+        n_acc = np.zeros((b,), np.int64)
+        next_tok = np.zeros((b,), np.int64)
+        for i in range(b):
+            uid = int(uids[i])
+            base_idx = int(indices[i])
+            a = k
+            for j in range(k):
+                d = int(draft[i, j])
+                ratio = p[i, j, d] / max(q[i, j, d], 1e-30)
+                u = _stream_uniform(seed, uid, base_idx + j, lm.ACCEPT_SALT)
+                if u > ratio:
+                    a = j
+                    resid = np.maximum(p[i, j] - q[i, j], 0.0)
+                    z = resid.sum()
+                    probs = resid / z if z > 0 else p[i, j]
+                    next_tok[i] = _stream_categorical(
+                        seed, uid, base_idx + j, lm.RESAMPLE_SALT, probs)
+                    break
+            if a == k:
+                next_tok[i] = _stream_categorical(
+                    seed, uid, base_idx + k, lm.BONUS_SALT, p[i, k])
+            n_acc[i] = a
+        return n_acc, next_tok
+
+    # -- observability -----------------------------------------------------
+
+    def note_round(self, lanes: int, accepted: int) -> None:
+        self.rounds += 1
+        self.drafted += lanes * self.k
+        self.accepted += int(accepted)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "k": self.k,
+            "draft_bits": self.policy.bits,
+            "draft_act_bits": self.policy.act_bits,
+            "rounds": self.rounds,
+            "drafted": self.drafted,
+            "accepted": self.accepted,
+            "acceptance_rate": (self.accepted / self.drafted
+                                if self.drafted else None),
+            "expected_tokens_per_round": self.expected_tokens(),
+        }
+
+
+def measure_acceptance(raw_params, cfg, base_policy: QuantPolicy,
+                       draft_bits: int, act_bits: Optional[int] = None,
+                       prompt=None, n_tokens: int = 32) -> float:
+    """Measured per-token greedy acceptance of a draft bit width.
+
+    Teacher-forced agreement: generate a greedy reference continuation
+    under the CONSERVATIVE tree (quantized with ``base_policy``), then
+    feed the same sequence through the draft tree and count positions
+    where the draft's argmax matches the reference's next token — exactly
+    the event "draft token accepted" of a greedy speculative round.  One
+    number per (draft_bits, act_bits); independent of k, so the planner's
+    grid reuses it across k candidates.
+    """
+    dp = QuantPolicy(bits=int(draft_bits), group_size=base_policy.group_size,
+                     min_size=base_policy.min_size,
+                     skip_embed=base_policy.skip_embed,
+                     codebook=base_policy.codebook,
+                     act_bits=act_bits)
+    cons, _, _ = quantize_params(raw_params, base_policy)
+    draft, _, _ = quantize_params(raw_params, dp)
+    if prompt is None:
+        prompt = [1, 2, 3, 5, 8, 13]
+    prompt = [int(t) % cfg.vocab for t in prompt]
+    cache_len = min(cfg.window or 4096, len(prompt) + n_tokens + 1)
+
+    def feed(params, seq):
+        """Greedy-teacher-forced argmax after each position of ``seq``."""
+        logits, cache = lm.prefill(
+            params, jnp.asarray([seq[:1]], jnp.int32), cfg, cache_len)
+        preds = [int(jnp.argmax(logits[0]))]
+        for t in seq[1:]:
+            logits, cache = lm.decode_step(
+                params, jnp.asarray([[t]], jnp.int32), cache, cfg)
+            preds.append(int(jnp.argmax(logits[0])))
+        return preds
+
+    # reference continuation under the conservative tree
+    logits, cache = lm.prefill(
+        cons, jnp.asarray([prompt], jnp.int32), cfg, cache_len)
+    ref = []
+    tok = int(jnp.argmax(logits[0]))
+    for _ in range(n_tokens):
+        ref.append(tok)
+        logits, cache = lm.decode_step(
+            cons, jnp.asarray([[tok]], jnp.int32), cache, cfg)
+        tok = int(jnp.argmax(logits[0]))
+    seq = prompt + ref
+    preds = feed(draft, seq)
+    # preds[i] is the draft's argmax after consuming seq[:i+1]; it is an
+    # accepted draft token when it equals the reference token seq[i+1]
+    hits = sum(1 for i in range(len(prompt) - 1, len(seq) - 1)
+               if preds[i] == seq[i + 1])
+    return hits / max(len(seq) - len(prompt), 1)

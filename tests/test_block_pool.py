@@ -95,6 +95,42 @@ def test_append_oom_returns_none():
     assert mgr.free_blocks == 2 and mgr.stats()["preemptions"] == 1
 
 
+def test_truncate_releases_rollback_tail():
+    """Speculative rollback: truncate drops every table entry past the
+    accepted frontier, returns the drop count, and is refcount-aware —
+    a shared block survives until its last owner lets go."""
+    mgr = BlockSpaceManager(num_blocks=8, block_size=4)
+    mgr.allocate(1, tuple(range(1, 11)))      # 10 tokens -> 3 blocks
+    assert mgr.truncate(1, 10) == 0           # frontier kept: no-op
+    assert mgr.truncate(1, 5) == 1            # back to 2 blocks
+    assert len(mgr.table(1)) == 2 and mgr.used_blocks == 2
+    mgr.check_invariants()
+    # regrow over the truncated tail: the freed block is reusable
+    kind, _, _ = mgr.append_slot(1, 8)
+    assert kind == "alloc" and mgr.used_blocks == 3
+    mgr.check_invariants()
+    # shared tail: the sharer's truncate must NOT free the owner's block
+    mgr2 = BlockSpaceManager(num_blocks=8, block_size=4)
+    prompt = (1, 2, 3, 4, 5, 6, 7, 8)
+    mgr2.allocate(1, prompt)
+    mgr2.allocate(2, prompt)                  # shares both blocks
+    assert mgr2.truncate(2, 4) == 1
+    assert mgr2.used_blocks == 2              # uid 1 still holds block 2
+    assert len(mgr2.table(1)) == 2
+    mgr2.check_invariants()
+    mgr2.free(1)
+    mgr2.free(2)
+    assert mgr2.used_blocks == 0
+
+
+def test_truncate_to_zero_frees_everything():
+    mgr = BlockSpaceManager(num_blocks=4, block_size=4)
+    mgr.allocate(7, (1, 2, 3, 4, 5))
+    assert mgr.truncate(7, 0) == 2
+    assert mgr.table(7) == [] and mgr.used_blocks == 0
+    mgr.check_invariants()
+
+
 def test_admission_cap_is_a_conservative_lower_bound():
     """admission_cap ignores intra-batch sharing (documented), so it
     lower-bounds actual admissions; once the registrant's blocks exist,
