@@ -39,10 +39,31 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
+import sys
 import time
 from typing import Any, Dict, List
 
-import jax
+
+def _ensure_tp_devices(argv=None) -> None:
+    """``--tp M`` on a CPU host needs M visible XLA devices, and the
+    forcing flag only works BEFORE jax initializes — scan argv and set it
+    here (mirrors ``repro.launch.serve``)."""
+    argv = sys.argv[1:] if argv is None else argv
+    tp = 1
+    for i, a in enumerate(argv):
+        if a == "--tp" and i + 1 < len(argv):
+            tp = int(argv[i + 1])
+        elif a.startswith("--tp="):
+            tp = int(a.split("=", 1)[1])
+    flags = os.environ.get("XLA_FLAGS", "")
+    if tp > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (flags + f" --xla_force_host_platform_device_count={tp}").strip()
+
+
+_ensure_tp_devices()
+
+import jax  # noqa: E402  (after the device-count env fixup)
 
 import repro.configs as C
 from repro.models import lm
@@ -109,7 +130,7 @@ def run_trace(params, cfg, ecfg: EngineConfig, trace: Trace) -> Dict[str, Any]:
 # --- replay mode ----------------------------------------------------------
 
 
-def _modeled_tps(params, cfg, policy, spec, batch: int) -> float:
+def _modeled_tps(params, cfg, policy, spec, batch: int, tp: int = 1, wire: int = 32) -> float:
     """Modeled decode tokens/s of a resolved plan at ``batch`` occupancy
     (the engine's ``planned_tps`` pricing, computed without building an
     engine — no quantization pass needed)."""
@@ -120,6 +141,11 @@ def _modeled_tps(params, cfg, policy, spec, batch: int) -> float:
     kw: Dict[str, Any] = {"batch": batch, "prt": spec.prt, "nbw": spec.nbw}
     if spec.calibration is not None:
         kw["machine"] = planning.machine_from_json(spec.calibration)
+        disp = planning.dispatch_from_json(spec.calibration)
+        if disp is not None:
+            kw["dispatch_cycles"] = disp
+    if tp > 1:
+        kw.update(tp=tp, wire_bits=wire, allreduce_elems=planning.tp_allreduce_elems(cfg))
     cost = planning.DecodeCostModel(**kw)
     secs = cost.iteration_seconds(
         cost.cycles(units), cost.qbytes(units, policy.group_size) + fixed
@@ -480,6 +506,116 @@ def _speculative_gate(args, params, cfg, trace: Trace) -> Dict[str, Any]:
     return report
 
 
+# --- tensor-parallel gate -------------------------------------------------
+
+
+def _tp_gate(args, params, cfg, trace: Trace) -> Dict[str, Any]:
+    """Greedy tp=M vs tp=1 A/B on the identical trace.
+
+    The same plan serves the same trace single-device and sharded over
+    ``--tp`` model-parallel shards; the gate asserts token-identical
+    completions per request — sharding the quantized tree may buy
+    throughput, never output drift (wire=32; the int8 wire is lossy by
+    design and has its own bounded-error property test).  The report
+    carries the engine's tp stats plus a per-shard modeled timing split
+    (compute / DRAM / wire) — the CI artifact.
+    """
+    from repro import planning
+    from repro.models.sail_linear import QuantPolicy
+
+    label = (args.plan or ["uniform:%d" % args.ql])[0]
+    common = dict(
+        batch_size=args.batch,
+        cache_len=args.cache_len,
+        quantize=True,
+        ql=args.ql,
+        group_size=32,
+        quant_kv=True,
+        mode="continuous",
+        plan=label,
+        prefill_budget=args.prefill_budget,
+        kv_block_size=args.block_size if args.paged else None,
+        kv_pool_blocks=args.pool_blocks,
+    )
+    base = run_trace(params, cfg, EngineConfig(tp=1, **common), trace)
+    shard = run_trace(params, cfg, EngineConfig(tp=args.tp, wire=args.wire, **common), trace)
+    base_tokens = base.pop("completion_tokens")
+    shard_tokens = shard.pop("completion_tokens")
+    identical = base_tokens == shard_tokens
+
+    # per-shard modeled split: each shard runs 1/tp of the lookups and
+    # streams 1/tp of the quantized bytes; the wire term is the ring
+    # all-reduce every shard pays in full
+    base_q = QuantPolicy(bits=args.ql, group_size=32, min_size=1024)
+    spec_obj = planning.as_plan(label)
+    if not spec_obj.solved:
+        spec_obj = planning.resolve_plan(spec_obj, params, cfg, base=base_q).spec
+    policy = spec_obj.to_policy(base_q)
+    units = planning.policy_units(params, policy)
+    fixed = planning.unquantized_bytes(params, policy)
+    cost = planning.DecodeCostModel(
+        batch=args.batch,
+        prt=spec_obj.prt,
+        nbw=spec_obj.nbw,
+        tp=args.tp,
+        wire_bits=args.wire,
+        allreduce_elems=planning.tp_allreduce_elems(cfg),
+    )
+    cycles = cost.cycles(units)
+    total = cost.qbytes(units, policy.group_size) + fixed
+    per_shard = [
+        {
+            "shard": i,
+            "modeled_compute_s": cost.t_compute(cycles),
+            "modeled_dram_s": cost.t_dram(total),
+            "modeled_wire_s": cost.t_wire(args.batch),
+        }
+        for i in range(args.tp)
+    ]
+    report = {
+        "trace": {
+            "hash": trace.trace_hash,
+            "requests": len(trace.requests),
+            "spec": trace.spec.to_json(),
+        },
+        "plan": label,
+        "pool": "paged" if args.paged else "ring",
+        "tp1": {
+            "measured_tps": base["measured_tps"],
+            "decode_iterations": base["decode_iterations"],
+            "generated_tokens": base["generated_tokens"],
+        },
+        "tp": {
+            "shards": args.tp,
+            "wire_bits": args.wire,
+            "measured_tps": shard["measured_tps"],
+            "decode_iterations": shard["decode_iterations"],
+            "generated_tokens": shard["generated_tokens"],
+            "stats": shard["tp"],
+            "per_shard": per_shard,
+        },
+        "token_identical": identical,
+    }
+    print(
+        f"tp gate ({label}, {report['pool']} pool): tp={args.tp} wire={args.wire} "
+        f"vs tp=1 on trace {trace.trace_hash}"
+    )
+    print(
+        f"  tp=1: {base['measured_tps']:.1f} tok/s over {base['decode_iterations']} iterations; "
+        f"tp={args.tp}: {shard['measured_tps']:.1f} tok/s over {shard['decode_iterations']}"
+    )
+    st = shard["tp"]
+    print(
+        f"  all-reduce {st['allreduce_bytes_per_iter']} B/iter, modeled wire share "
+        f"{st['modeled_wire_share']:.3f}" if st["modeled_wire_share"] is not None
+        else f"  all-reduce {st['allreduce_bytes_per_iter']} B/iter"
+    )
+    print(f"  completions token-identical: {identical}")
+    if not identical:
+        raise SystemExit(f"FAIL: tp={args.tp} completions diverged from tp=1 on the same trace")
+    return report
+
+
 # --- CLI ------------------------------------------------------------------
 
 
@@ -611,6 +747,22 @@ def main():
         default=3,
         help="paged gate: KV budget quoted as this many full cache_len slots",
     )
+    # tensor-parallel serving
+    ap.add_argument(
+        "--tp",
+        type=int,
+        default=1,
+        help="with --replay: tp=M vs tp=1 A/B gate on the same trace — "
+        "token-identity required (repro.serving.distributed); forces M "
+        "host devices on CPU automatically",
+    )
+    ap.add_argument(
+        "--wire",
+        type=int,
+        default=32,
+        choices=(8, 32),
+        help="tp gate: all-reduce precision (32 exact, 8 compressed)",
+    )
     # self-speculative decoding
     ap.add_argument(
         "--speculative",
@@ -670,6 +822,14 @@ def main():
 
     if args.speculative:
         report = _speculative_gate(args, params, cfg, trace)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"wrote {args.json}")
+        return
+
+    if args.replay and args.tp > 1:
+        report = _tp_gate(args, params, cfg, trace)
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(report, f, indent=2)

@@ -294,9 +294,16 @@ def quantize_activations(x: jax.Array, bits: int = 8):
     """Per-token (row) symmetric activation quantization.
 
     x[B, K] -> (x_q int32 in [-2^(b-1)+1, 2^(b-1)-1], scale f32 [B, 1]).
+
+    Under a tensor-parallel shard_map trace the absmax is maxed over the
+    model axis: a row-parallel matmul's input is K-sharded, and only the
+    global absmax reproduces the unsharded quantization bit-for-bit.
     """
+    from repro.dist.sharding import tp_axis_max
+
     qmax = (1 << (bits - 1)) - 1
     absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    absmax = tp_axis_max(absmax)
     absmax = jnp.where(absmax == 0, 1.0, absmax)
     scale = absmax / qmax
     xq = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)

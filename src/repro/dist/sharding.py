@@ -10,15 +10,21 @@ weight shards.  Rules are name-based over the parameter tree:
   * row-parallel (``wo``, ``w_down``): model axis on the reduction dim,
     FSDP on the output dim;
   * embeddings: vocab (dim 0) on the model axis;
-  * 1-D params (norm scales, biases) and quantized QTensor leaves
-    (packed codes / group scales / codebooks) replicated.
+  * quantized QTensor leaves: packed codes and group scales partition
+    along the same logical axes as the matrix they encode (the parent
+    rule applied at the leaf's rank — group-quantization keeps both the
+    K-derived dim at position -2 and the N dim at position -1, and
+    stacked-layer leading dims align), codebooks replicated;
+  * 1-D params (norm scales, biases) replicated.
 
 ``_trim_spec`` makes every rule safe: any mesh axis that is absent or
 does not divide the concrete dim is dropped, so smoke configs with odd
-head counts lower without GSPMD errors.
+head counts (or group counts that don't divide the shard count) lower
+without GSPMD errors.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import re
 from typing import Optional, Sequence, Tuple, Union
@@ -120,8 +126,17 @@ def param_spec(path: str, shape: Sequence[int], cfg: ModelConfig,
     nd = len(shape)
     if nd == 0:
         return P()
-    if any(f in path for f in _QUANT_FIELDS):
-        return P(*([None] * nd))
+    quant_field = next((f for f in _QUANT_FIELDS if path.endswith(f)), None)
+    if quant_field is not None:
+        if quant_field == ".codebook":
+            # LUT machinery is tiny and every shard needs the full table
+            # (stacked codebooks [L, 2^bits] included)
+            return P(*([None] * nd))
+        # packed codes [(K//G)*wpg, N] and group scales [K//G, N] keep the
+        # parent matrix's (K-derived, N) dim order, so the parent's rule
+        # applies verbatim at this rank; _trim_spec drops the K-side axis
+        # when the group count does not divide the shard count
+        return param_spec(path[: -len(quant_field)], shape, cfg, plan)
     names = _NAME_RE.findall(path)
     leaf = names[-1] if names else ""
     if nd == 1:
@@ -194,6 +209,61 @@ def data_shardings(mesh: Mesh, tree, plan: Plan):
         spec = _trim_spec(P(plan.dp), shape, mesh)
         return NamedSharding(mesh, spec)
     return jax.tree_util.tree_map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel trace context (serving decode under shard_map)
+# ---------------------------------------------------------------------------
+#
+# Model code stays mesh-agnostic: row-parallel matmuls (wo / w_down) pass
+# their partial sums through ``tp_all_reduce`` and activation quantization
+# passes its per-token absmax through ``tp_axis_max``.  Outside a TP trace
+# both are identity.  ``serving/distributed.py`` enters ``tp_context``
+# around the shard_map body at trace time, which lowers them to
+# collectives over the model axis.
+
+_TP_STATE: list = []
+
+
+@contextlib.contextmanager
+def tp_context(axis: str = "model", wire_bits: int = 32):
+    """Activate TP collectives for code traced inside this block."""
+    _TP_STATE.append((axis, int(wire_bits)))
+    try:
+        yield
+    finally:
+        _TP_STATE.pop()
+
+
+def tp_active() -> bool:
+    return bool(_TP_STATE)
+
+
+def tp_all_reduce(x: jax.Array) -> jax.Array:
+    """Sum row-parallel partial results over the model axis (identity
+    outside a TP trace).  ``wire_bits=8`` sends int8+scale compressed
+    partials — ``dist/compress.py`` generalized from gradients to
+    activations, error feedback off because inference has no next
+    iteration to carry a residual into."""
+    if not _TP_STATE:
+        return x
+    axis, wire = _TP_STATE[-1]
+    if wire == 8:
+        from repro.dist.compress import _quantize_dequantize
+
+        x = _quantize_dequantize(x)
+    return jax.lax.psum(x, axis)
+
+
+def tp_axis_max(x: jax.Array) -> jax.Array:
+    """Max over the model axis, so per-token activation-quantization
+    scales on row-parallel inputs (each shard sees only its K-slice)
+    match the unsharded computation bit-for-bit.  Identity outside a TP
+    trace; a numeric no-op on replicated (column-parallel) inputs."""
+    if not _TP_STATE:
+        return x
+    axis, _ = _TP_STATE[-1]
+    return jax.lax.pmax(x, axis)
 
 
 def cache_shardings(mesh: Mesh, tree, plan: Plan):

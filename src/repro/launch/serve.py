@@ -24,10 +24,34 @@ Precision planning (``repro.planning``):
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
-import jax
-import numpy as np
+
+def _ensure_tp_devices(argv=None) -> None:
+    """``--tp M`` on a CPU host needs M visible XLA devices, and the
+    forcing flag only works BEFORE jax initializes — scan argv and set it
+    here so ``python -m repro.launch.serve --tp 4`` just works.  Real
+    multi-device backends (and an explicit user XLA_FLAGS) are left
+    alone."""
+    argv = sys.argv[1:] if argv is None else argv
+    tp = 1
+    for i, a in enumerate(argv):
+        if a == "--tp" and i + 1 < len(argv):
+            tp = int(argv[i + 1])
+        elif a.startswith("--tp="):
+            tp = int(a.split("=", 1)[1])
+    flags = os.environ.get("XLA_FLAGS", "")
+    if tp > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={tp}").strip()
+
+
+_ensure_tp_devices()
+
+import jax  # noqa: E402  (after the device-count env fixup)
+import numpy as np  # noqa: E402
 
 
 def main() -> None:
@@ -35,6 +59,10 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ql", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=None,
+                    help="quantization group size (default "
+                         "min(128, d_model)); under --tp the per-matrix "
+                         "group count must divide the shard count")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
@@ -76,6 +104,15 @@ def main() -> None:
     ap.add_argument("--bit-policy", default=None,
                     help="DEPRECATED alias for --plan (grammar strings "
                          "only)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shard count: shard the "
+                         "quantized weight tree over a (1, M) mesh "
+                         "(repro.serving.distributed).  On CPU the "
+                         "launcher forces M host devices automatically; "
+                         "a plan carrying tp= overrides this knob")
+    ap.add_argument("--wire", type=int, default=32, choices=(8, 32),
+                    help="TP all-reduce precision: 32 exact, 8 "
+                         "compressed int8+scale partial sums")
     ap.add_argument("--mode", choices=("continuous", "batch"),
                     default="continuous")
     ap.add_argument("--prefill-budget", type=int, default=None,
@@ -103,19 +140,25 @@ def main() -> None:
         controller = knobs or True
     eng = Engine(params, cfg, EngineConfig(
         batch_size=args.batch, cache_len=args.cache_len, quantize=True,
-        ql=args.ql, group_size=min(128, cfg.d_model),
+        ql=args.ql,
+        group_size=(args.group_size if args.group_size is not None
+                    else min(128, cfg.d_model)),
         quant_kv=not args.no_quant_kv, mode=args.mode,
         plan=plan, slo=args.slo, tap_capacity=args.tap,
         controller=controller, bit_policy=args.bit_policy,
-        prefill_budget=args.prefill_budget))
+        prefill_budget=args.prefill_budget, tp=args.tp, wire=args.wire))
     st = eng.stats()
     quant_desc = (f"mixed-precision plan {st['plan_hash']}"
                   if st["mixed_precision"]
                   else f"Q{args.ql} (plan {st['plan_hash']})")
+    tp_desc = ""
+    if st["tp"] is not None:
+        tp_desc = (f", tp={st['tp']['shards']} "
+                   f"(wire={st['tp']['wire_bits']})")
     print(f"{cfg.name}: {quant_desc} weights "
           f"({eng.compression:.2f}x compression), "
           f"{'int8' if not args.no_quant_kv else 'f32'} KV, "
-          f"{args.mode} scheduling")
+          f"{args.mode} scheduling{tp_desc}")
     if args.save_plan and eng.plan is not None:
         eng.plan.save(args.save_plan)
         print(f"wrote plan {eng.plan.spec_hash} to {args.save_plan}")

@@ -20,7 +20,7 @@ from repro.models.common import ModelConfig
 from repro.models.layers import (apply_attention, apply_mlp, apply_norm,
                                  attention_init, mlp_init, norm_init)
 from repro.models.sail_linear import mm
-from repro.dist.sharding import maybe_constrain
+from repro.dist.sharding import maybe_constrain, tp_all_reduce
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +234,8 @@ def block_apply_decode(p, x, cfg: ModelConfig, layer_cache, position,
             kf, vf = kc, vc
 
     attn_out = _decode_attend(q, kf, vf, position, cfg, cache_len)
-    attn_out = mm(attn_out.reshape(b, 1, cfg.q_dim), p["attn"]["wo"])
+    attn_out = tp_all_reduce(
+        mm(attn_out.reshape(b, 1, cfg.q_dim), p["attn"]["wo"]))
 
     if cfg.family == "hybrid":
         hs = apply_norm(p["ssm_norm"], x, cfg)
@@ -364,7 +365,8 @@ def block_apply_verify(p, x, cfg: ModelConfig, layer_cache, position,
             kf, vf = kc, vc
 
     attn_out = _verify_attend(q, kf, vf, position, cfg, cache_len)
-    attn_out = mm(attn_out.reshape(b, t, cfg.q_dim), p["attn"]["wo"])
+    attn_out = tp_all_reduce(
+        mm(attn_out.reshape(b, t, cfg.q_dim), p["attn"]["wo"]))
     x = (x + attn_out).astype(in_dtype)
 
     h = apply_norm(p["mlp_norm"], x, cfg)

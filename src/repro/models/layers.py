@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.models.common import ModelConfig
 from repro.models.sail_linear import mm
-from repro.dist.sharding import maybe_constrain
+from repro.dist.sharding import maybe_constrain, tp_all_reduce
 
 Initializer = jax.nn.initializers.Initializer
 
@@ -251,7 +251,7 @@ def apply_attention(p, x, cfg: ModelConfig, *, positions, causal=True,
                           window=window, chunk=cfg.attn_chunk,
                           kv_valid=kv_valid)
     out = maybe_constrain(out, "batch", None, "model", None)
-    out = mm(out.reshape(b, t, cfg.q_dim), p["wo"])
+    out = tp_all_reduce(mm(out.reshape(b, t, cfg.q_dim), p["wo"]))
     if cfg.attention_bias:
         out = out + p["bo"]
     return out
@@ -280,4 +280,4 @@ def apply_mlp(p, x, cfg: ModelConfig):
     else:
         h = jax.nn.gelu(mm(x, p["w_up"]))
     h = maybe_constrain(h, "batch", None, "model")
-    return mm(h, p["w_down"])
+    return tp_all_reduce(mm(h, p["w_down"]))

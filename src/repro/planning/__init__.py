@@ -12,10 +12,12 @@ from typing import Any, Mapping, Optional
 
 from repro.planning.calibrate_cost import (
     CalibrationResult,
+    dispatch_from_json,
     machine_from_json,
     run_calibration,
 )
 from repro.planning.cost import (
+    DEFAULT_LINK_BW,
     Budgets,
     DecodeCostModel,
     PlanCost,
@@ -27,6 +29,7 @@ from repro.planning.cost import (
     kv_token_bytes,
     policy_units,
     speculative_round_seconds,
+    tp_allreduce_elems,
     unquantized_bytes,
 )
 from repro.planning.planner import Planner, PlanResult
@@ -37,6 +40,7 @@ __all__ = [
     "ActivationTap",
     "Budgets",
     "CalibrationResult",
+    "DEFAULT_LINK_BW",
     "DecodeCostModel",
     "DraftSpec",
     "PlanCost",
@@ -47,6 +51,7 @@ __all__ = [
     "Slo",
     "as_plan",
     "calib_for_layer",
+    "dispatch_from_json",
     "expected_tokens_per_round",
     "kv_block_bytes",
     "kv_pool_blocks",
@@ -57,6 +62,7 @@ __all__ = [
     "resolve_plan",
     "speculative_round_seconds",
     "run_calibration",
+    "tp_allreduce_elems",
     "unquantized_bytes",
 ]
 

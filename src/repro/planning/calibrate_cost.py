@@ -19,6 +19,20 @@ bit-serial LUT-GEMV whose executed work genuinely varies along the
 (nbw, abits) axes the cost model prices (``2**nbw`` LUT entries, ``K/nbw``
 groups, ``abits`` bit-planes), exactly the structure of
 ``cost_model.lut_gemv_cycles``.
+
+Host backends add a fixed per-invocation dispatch overhead the dataflow
+model has no column for — at low (wbits, abits, nbw) the kernel's real
+work shrinks until that constant dominates, which is exactly where the
+pre-PR-10 fit's worst grid point (~0.69 relative error) lived.  The fit
+therefore carries one extra *indicator column per (NBW, abits) cell*: a
+fixed cycle count charged per kernel call, fitted jointly with the
+dataflow constants.  The per-cell split matters because the trace each
+(NBW, abits) pair compiles to differs in fixed structure (LUT build
+fan-in and the bit-plane loop count), not just in per-element work —
+measured grids show e.g. the (nbw=1, abits=8) cell sitting ~4x off the
+neighboring cells while the wbits axis within a cell moves only with
+timing noise.  The fitted ``dispatch_cycles`` ride the provenance into
+``PlanSpec.calibration`` and ``DecodeCostModel.dispatch_cycles``.
 """
 
 from __future__ import annotations
@@ -72,6 +86,10 @@ class CalibrationResult:
     max_rel_err: float
     mean_rel_err: float
     dram_bw_measured: float
+    # fitted per-(NBW, abits) fixed dispatch overhead (cycles per kernel
+    # call); empty when the fit ran without dispatch columns (pre-PR-10
+    # artifacts)
+    dispatch_cycles: Dict[Tuple[int, int], float] = dataclasses.field(default_factory=dict)
 
     def machine(self, base: Optional[SailMachine] = None) -> SailMachine:
         base = base if base is not None else SailMachine()
@@ -80,11 +98,13 @@ class CalibrationResult:
     def cost_model(self, **kwargs):
         from repro.planning.cost import DecodeCostModel
 
+        if self.dispatch_cycles and "dispatch_cycles" not in kwargs:
+            kwargs["dispatch_cycles"] = tuple(sorted(self.dispatch_cycles.items()))
         return DecodeCostModel(machine=self.machine(), **kwargs)
 
     def provenance(self) -> Dict[str, Any]:
         """Compact JSON-safe record for ``PlanSpec.calibration``."""
-        return {
+        out = {
             "machine_overrides": {k: float(v) for k, v in self.machine_overrides.items()},
             "backend": self.backend,
             "shape": list(self.shape),
@@ -92,6 +112,12 @@ class CalibrationResult:
             "mean_rel_err": float(self.mean_rel_err),
             "dram_bw_measured": float(self.dram_bw_measured),
         }
+        if self.dispatch_cycles:
+            out["dispatch_cycles"] = {
+                f"{nbw}:{ab}": float(v)
+                for (nbw, ab), v in sorted(self.dispatch_cycles.items())
+            }
+        return out
 
     def to_json(self) -> Dict[str, Any]:
         d = self.provenance()
@@ -109,6 +135,7 @@ class CalibrationResult:
             max_rel_err=float(d["max_rel_err"]),
             mean_rel_err=float(d["mean_rel_err"]),
             dram_bw_measured=float(d.get("dram_bw_measured", 0.0)),
+            dispatch_cycles=_parse_dispatch(d.get("dispatch_cycles", {})),
         )
 
     def save(self, path: str) -> None:
@@ -132,6 +159,31 @@ def machine_from_json(
         if k in FITTED_FIELDS
     }
     return dataclasses.replace(base, **overrides)
+
+
+def _parse_dispatch(disp: Mapping[Any, Any]) -> Dict[Tuple[int, int], float]:
+    """JSON ``"nbw:abits" -> cycles`` mapping (or in-memory tuple keys)
+    back to the ``{(nbw, abits): cycles}`` form."""
+    out: Dict[Tuple[int, int], float] = {}
+    for key, v in disp.items():
+        if isinstance(key, str):
+            nbw, ab = key.split(":")
+        else:
+            nbw, ab = key
+        out[(int(nbw), int(ab))] = float(v)
+    return out
+
+
+def dispatch_from_json(
+    calibration: Mapping[str, Any],
+) -> Optional[Tuple[Tuple[Tuple[int, int], float], ...]]:
+    """``PlanSpec.calibration`` provenance -> the hashable per-(NBW,
+    abits) dispatch table ``DecodeCostModel.dispatch_cycles`` takes (None
+    when the calibration predates the dispatch fit)."""
+    disp = calibration.get("dispatch_cycles")
+    if not disp:
+        return None
+    return tuple(sorted(_parse_dispatch(disp).items()))
 
 
 def _design_row(
@@ -158,7 +210,8 @@ def fit_constants(
     k: int,
     n: int,
     machine_base: Optional[SailMachine] = None,
-) -> Dict[str, float]:
+    fit_dispatch: bool = False,
+):
     """Least-squares fit of the dataflow constants in cycle space.
 
     ``points``: dicts with wbits/abits/nbw/t_s.  Cycles are taken at the
@@ -166,10 +219,22 @@ def fit_constants(
     become *effective* costs for this host, which is exactly what an SLO
     budget needs.  Negative solutions are clipped to zero and the
     remaining columns refit (non-negative constants only).
+
+    ``fit_dispatch=True`` adds one indicator column per distinct (NBW,
+    abits) cell — a fixed per-invocation overhead (module docstring) —
+    and returns ``(constants, dispatch_cycles)`` instead of the bare
+    constants dict.
     """
     m = machine_base if machine_base is not None else SailMachine()
     feats = [_design_row(m, batch, k, n, p["nbw"], p["wbits"], p["abits"]) for p in points]
     rows = np.stack(feats)
+    cells: List[Tuple[int, int]] = []
+    if fit_dispatch:
+        cells = sorted({(int(p["nbw"]), int(p["abits"])) for p in points})
+        ind = np.zeros((rows.shape[0], len(cells)))
+        for i, p in enumerate(points):
+            ind[i, cells.index((int(p["nbw"]), int(p["abits"])))] = 1.0
+        rows = np.concatenate([rows, ind], axis=1)
     target = np.array([p["t_s"] * m.freq_hz for p in points])
     # weight by 1/measured so the solve minimizes *relative* error — the
     # quantity the CI gate bounds — instead of letting the slowest grid
@@ -186,12 +251,16 @@ def fit_constants(
         active = [a for a, s in zip(active, sol) if s >= 0]
         if not active:
             break
-    return {
+    constants = {
         "build_overhead": float(theta[0]),
         "rebuild_ctrl_cycles": float(theta[1]),
         "lookup_base_cycles": float(theta[2]),
         "lookup_per_bit_cycles": float(theta[3]),
     }
+    if not fit_dispatch:
+        return constants
+    dispatch = {cell: float(theta[4 + i]) for i, cell in enumerate(cells)}
+    return constants, dispatch
 
 
 def measure_stream_bandwidth(nbytes: int = 64 * 2**20, iters: int = 5) -> float:
@@ -240,7 +309,8 @@ def run_calibration(
                 )
                 raw.append(dict(wbits=wbits, abits=abits, nbw=nbw, t_s=t))
 
-    overrides = fit_constants(raw, batch, k, n, machine_base=m)
+    overrides, dispatch = fit_constants(raw, batch, k, n, machine_base=m,
+                                        fit_dispatch=True)
     bw = measure_stream_bandwidth()
     overrides["dram_bw"] = bw
     overrides["dram_efficiency"] = 1.0  # measured BW is already achieved
@@ -251,6 +321,7 @@ def run_calibration(
     for p in raw:
         wb, ab, nbw = p["wbits"], p["abits"], p["nbw"]
         modeled = lut_gemv_cycles(fitted, batch, k, n, nbw, wb, ab, threads=1)
+        modeled += dispatch.get((int(nbw), int(ab)), 0.0)
         measured = p["t_s"] * m.freq_hz
         rel = abs(modeled - measured) / measured
         errs.append(rel)
@@ -271,4 +342,5 @@ def run_calibration(
         max_rel_err=float(np.max(errs)),
         mean_rel_err=float(np.mean(errs)),
         dram_bw_measured=bw,
+        dispatch_cycles=dispatch,
     )

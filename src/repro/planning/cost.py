@@ -22,6 +22,18 @@ quantize — embeddings, norms — which streams every iteration whatever
 the plan says.)  ``Planner.solve(slo=...)`` is just this decomposition
 plus the existing solver.
 
+Tensor-parallel pricing (PR 10): sharding the weight tree ``tp`` ways
+divides both the compute and the weight stream but adds a wire term —
+two ring all-reduces per layer (``wo`` and ``w_down`` partial sums):
+
+    t_iter = max(t_compute / M, t_dram / M, t_wire)
+    t_wire = 2(M-1)/M * batch * allreduce_elems * wire_bits/8 / link_bw
+
+so the Planner can trade bits against shards at a fixed SLO: per-shard
+budgets scale by M, while ``t_wire`` — which no bit allocation changes —
+caps how far sharding helps.  ``wire_bits=8`` prices the compressed
+(int8+scale) all-reduce.
+
 Per-layer PRT calibration: ``calib`` may be one f32 ``[B, K]`` activation
 batch or a ``{layer: batch}`` mapping (``None`` key = global fallback),
 e.g. from ``repro.planning.tap.ActivationTap.calib()`` — each unit is
@@ -35,6 +47,18 @@ from typing import Any, List, Optional, Tuple
 
 from repro.core import cost_model as cm
 from repro.core.pattern import calib_for_layer
+
+# Inter-shard link bandwidth when no measured/configured value is given:
+# one PCIe 4.0 x16 link's practical ~16 GB/s — the class of interconnect
+# the commodity-hardware deployments SAIL targets actually have.
+DEFAULT_LINK_BW = 16e9
+
+
+def tp_allreduce_elems(cfg) -> int:
+    """All-reduce payload elements per decode token: one ``d_model``
+    partial sum per attention (``wo``) and one per MLP (``w_down``) in
+    every layer.  ``cfg`` is duck-typed (needs ``n_layers``/``d_model``)."""
+    return 2 * int(cfg.n_layers) * int(cfg.d_model)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,7 +93,11 @@ class Budgets:
 
 @dataclasses.dataclass(frozen=True)
 class PlanCost:
-    """Modeled cost of one plan/policy on one model."""
+    """Modeled cost of one plan/policy on one model.
+
+    ``t_compute`` / ``t_dram`` are per-shard times (already divided by
+    the model's ``tp``); ``t_wire`` is the per-iteration all-reduce time
+    (0.0 at ``tp=1``)."""
 
     cycles: float
     quant_bytes: int
@@ -78,6 +106,7 @@ class PlanCost:
     t_dram: float
     seconds_per_iteration: float
     tokens_per_second: float
+    t_wire: float = 0.0
 
     @property
     def total_bytes(self) -> int:
@@ -86,6 +115,14 @@ class PlanCost:
     @property
     def dram_bound(self) -> bool:
         return self.t_dram > self.t_compute
+
+    @property
+    def bound(self) -> str:
+        """Which term sets the iteration time: "compute", "dram", or
+        "wire" — the regime the SLO solver is trading within."""
+        terms = {"compute": self.t_compute, "dram": self.t_dram,
+                 "wire": self.t_wire}
+        return max(terms, key=terms.get)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +133,14 @@ class DecodeCostModel:
     "measured"); ``nbw`` is a fixed NBW or "auto" (per-unit cycle-optimal);
     ``include_dram=False`` reverts to the legacy compute-only objective
     (the pre-PlanSpec behavior, kept for A/B in the bench).
+
+    ``tp`` / ``wire_bits`` / ``link_bw`` / ``allreduce_elems`` price
+    tensor-parallel serving (module docstring): compute and DRAM divide
+    by the shard count, the all-reduce adds ``t_wire``.
+    ``dispatch_cycles`` is an optional per-(NBW, abits) fixed
+    kernel-dispatch overhead fitted by ``planning.calibrate_cost`` —
+    (((nbw, abits), cycles), ...) pairs, charged once per kernel
+    invocation.
     """
 
     machine: cm.SailMachine = dataclasses.field(default_factory=cm.SailMachine)
@@ -105,11 +150,38 @@ class DecodeCostModel:
     nbw: Any = "auto"
     include_dram: bool = True
     calib: Any = None
+    tp: int = 1
+    wire_bits: int = 32
+    link_bw: Optional[float] = None
+    allreduce_elems: float = 0.0
+    dispatch_cycles: Any = None
 
     def __post_init__(self):
         from repro.core import pattern
 
         object.__setattr__(self, "calib", pattern.canonical_calib(self.calib))
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if self.wire_bits not in (8, 32):
+            raise ValueError(f"wire_bits must be 8 or 32, got {self.wire_bits}")
+        disp = self.dispatch_cycles
+        if disp is not None and not isinstance(disp, tuple):
+            # accept dicts / lists (JSON provenance) but store hashably
+            items = disp.items() if hasattr(disp, "items") else disp
+            disp = tuple(
+                sorted(
+                    (
+                        (
+                            (int(k.split(":")[0]), int(k.split(":")[1]))
+                            if isinstance(k, str)
+                            else (int(k[0]), int(k[1]))
+                        ),
+                        float(v),
+                    )
+                    for k, v in items
+                )
+            )
+            object.__setattr__(self, "dispatch_cycles", disp)
 
     # -- per-unit pricing -------------------------------------------------
 
@@ -120,6 +192,17 @@ class DecodeCostModel:
             self.prt, nbw, wbits, abits, calib_for_layer(self.calib, layer), self.machine
         )
 
+    def _dispatch(self, nbw: int, abits: int) -> float:
+        """Fixed per-invocation dispatch overhead at this (NBW, abits)
+        cell (0.0 when no calibration fitted one)."""
+        if not self.dispatch_cycles:
+            return 0.0
+        want = (int(nbw), int(abits))
+        for key, cyc in self.dispatch_cycles:
+            if key == want:
+                return cyc
+        return 0.0
+
     def unit_cycles(self, k, n, wbits, abits, copies: int = 1, layer=None) -> float:
         """C-SRAM cycles of one [K, N] matrix at its allocated precision
         (f32 activations — abits None — are priced at the 8-bit default,
@@ -127,15 +210,16 @@ class DecodeCostModel:
         ab = 8 if abits is None else int(abits)
         calib = calib_for_layer(self.calib, layer)
         if self.nbw == "auto":
-            _, cyc = cm._best_nbw_and_cycles(
+            nbw_used, cyc = cm._best_nbw_and_cycles(
                 k, n, wbits, ab, self.batch, self.threads, self.machine, self.prt, calib
             )
         else:
-            disc = cm.resolve_prt_discount(self.prt, self.nbw, wbits, ab, calib, self.machine)
+            nbw_used = int(self.nbw)
+            disc = cm.resolve_prt_discount(self.prt, nbw_used, wbits, ab, calib, self.machine)
             cyc = cm.lut_gemv_cycles(
-                self.machine, self.batch, k, n, self.nbw, wbits, ab, self.threads, disc
+                self.machine, self.batch, k, n, nbw_used, wbits, ab, self.threads, disc
             )
-        return copies * cyc
+        return copies * (cyc + self._dispatch(nbw_used, ab))
 
     def best_nbw(self, k, n, wbits, abits, layer=None) -> int:
         ab = 8 if abits is None else int(abits)
@@ -171,31 +255,61 @@ class DecodeCostModel:
         return sum(cm.qtensor_bytes(u[0], u[1], u[2], group_size, u[4]) for u in units)
 
     def t_compute(self, cycles: float) -> float:
-        return cycles / self.machine.freq_hz
+        """Per-shard compute time: each of the ``tp`` shards runs 1/tp of
+        every matmul's lookups."""
+        return cycles / self.machine.freq_hz / self.tp
 
     def t_dram(self, total_bytes: float) -> float:
+        """Per-shard weight-stream time: the sharded tree streams 1/tp of
+        the bytes per device."""
         if not self.include_dram:
             return 0.0
-        return total_bytes / (self.machine.dram_bw * self.machine.dram_efficiency)
+        return total_bytes / (self.machine.dram_bw * self.machine.dram_efficiency) / self.tp
+
+    def t_wire(self, batch=None) -> float:
+        """Per-iteration all-reduce time: a ring all-reduce moves
+        ``2(M-1)/M`` of the payload per shard, and the payload is one
+        partial sum per row-parallel matmul per token
+        (``allreduce_elems`` elements at ``wire_bits``)."""
+        if self.tp <= 1 or self.allreduce_elems <= 0:
+            return 0.0
+        b = self.batch if batch is None else batch
+        payload = b * self.allreduce_elems * self.wire_bits / 8.0
+        bw = self.link_bw if self.link_bw is not None else DEFAULT_LINK_BW
+        return 2.0 * (self.tp - 1) / self.tp * payload / bw
 
     def iteration_seconds(self, cycles: float, total_bytes: float) -> float:
         """Ping-pong LLC overlap: the weight stream hides behind compute
-        (or vice versa), so one iteration costs the max of the two."""
-        return max(self.t_compute(cycles), self.t_dram(total_bytes))
+        (or vice versa) and the all-reduce overlaps the other layers'
+        work, so one iteration costs the max of the three terms."""
+        return max(self.t_compute(cycles), self.t_dram(total_bytes), self.t_wire())
 
     def tokens_per_second(self, cycles: float, total_bytes: float, batch=None) -> float:
         b = self.batch if batch is None else batch
         return b / max(self.iteration_seconds(cycles, total_bytes), 1e-30)
 
     def budgets(self, slo: Slo, fixed_bytes: int = 0) -> Budgets:
-        """Decompose an SLO into the joint solver's two linear budgets."""
+        """Decompose an SLO into the joint solver's two linear budgets.
+
+        Under TP the per-shard budgets scale by the shard count (the
+        model streams/computes 1/tp per device), while ``t_wire`` —
+        which no bit allocation changes — must fit on its own or the SLO
+        is unreachable at this (tp, wire) point."""
         t = slo.seconds_per_iteration
-        cycle_budget = t * self.machine.freq_hz
+        tw = self.t_wire(slo.batch)
+        if tw >= t:
+            raise ValueError(
+                f"SLO {slo.target_tps} tok/s @ batch {slo.batch} is unreachable at "
+                f"tp={self.tp}, wire={self.wire_bits}: the all-reduce alone takes "
+                f"{tw:.2e}s of the {t:.2e}s iteration budget — no bit allocation "
+                "can fix a wire-bound plan (fewer shards or wire=8 might)"
+            )
+        cycle_budget = t * self.machine.freq_hz * self.tp
         byte_budget = None
         if self.include_dram:
-            byte_budget = int(t * self.machine.dram_bw * self.machine.dram_efficiency) - int(
-                fixed_bytes
-            )
+            byte_budget = int(
+                t * self.machine.dram_bw * self.machine.dram_efficiency * self.tp
+            ) - int(fixed_bytes)
             if byte_budget < 0:
                 raise ValueError(
                     f"SLO {slo.target_tps} tok/s @ batch {slo.batch} is unreachable: "
@@ -223,8 +337,8 @@ class DecodeCostModel:
         qbytes = self.qbytes(units, policy.group_size)
         fixed = unquantized_bytes(params, policy) if self.include_dram else 0
         total = qbytes + fixed
-        tc, td = self.t_compute(cycles), self.t_dram(total)
-        secs = max(tc, td)
+        tc, td, tw = self.t_compute(cycles), self.t_dram(total), self.t_wire()
+        secs = max(tc, td, tw)
         b = self.batch if batch is None else batch
         return PlanCost(
             cycles=cycles,
@@ -232,6 +346,7 @@ class DecodeCostModel:
             fixed_bytes=fixed,
             t_compute=tc,
             t_dram=td,
+            t_wire=tw,
             seconds_per_iteration=secs,
             tokens_per_second=b / max(secs, 1e-30),
         )

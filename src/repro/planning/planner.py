@@ -24,7 +24,11 @@ Invariants:
 - A returned ``PlanResult.spec`` is always *solved*: ``auto`` modes carry
   ``weights_per_unit``/``acts_per_unit`` and a ``kv_bits`` of ``"auto"``
   is resolved to a concrete 8 or 32 (per-layer KV probe vs
-  ``kv_tolerance``) before the result leaves the planner.
+  ``kv_tolerance``) before the result leaves the planner.  A ``tp`` of
+  ``"auto"`` is pinned to the smallest shard count whose modeled
+  ``t_iter`` meets the SLO *before* the bit solve, so the per-shard
+  budgets the allocator then sees already include the xM scaling — this
+  is how the planner trades bits against shards at a fixed target.
 - ``replan`` never mutates the served plan's allocation unless
   ``resolve=True``; the cheap path only re-prices under measured PRT
   discounts.
@@ -98,9 +102,16 @@ class Planner:
         if cost is None:
             prt = _solver_prt(self.plan.prt)
             if self.plan.calibration is not None:
-                from repro.planning.calibrate_cost import machine_from_json
+                from repro.planning.calibrate_cost import (
+                    dispatch_from_json,
+                    machine_from_json,
+                )
 
-                cost = DecodeCostModel(machine=machine_from_json(self.plan.calibration), prt=prt)
+                cost = DecodeCostModel(
+                    machine=machine_from_json(self.plan.calibration),
+                    prt=prt,
+                    dispatch_cycles=dispatch_from_json(self.plan.calibration),
+                )
             else:
                 cost = DecodeCostModel(prt=prt)
         self.cost = cost
@@ -132,10 +143,29 @@ class Planner:
             self._fixed_bytes = unquantized_bytes(self.params, self.base)
         return self._fixed_bytes
 
-    def budgets(self, slo: Slo):
+    def _tp_cost(self, cost: DecodeCostModel, plan: PlanSpec) -> DecodeCostModel:
+        """Apply a plan's tensor-parallel knobs to a cost model: shard
+        count, wire precision, and the model's all-reduce payload."""
+        tp = plan.tp if isinstance(plan.tp, int) else 1
+        if tp <= 1 and plan.wire is None:
+            return cost
+        from repro.planning.cost import tp_allreduce_elems
+
+        return dataclasses.replace(
+            cost,
+            tp=max(tp, 1),
+            wire_bits=plan.wire if plan.wire is not None else 32,
+            allreduce_elems=(float(tp_allreduce_elems(self.cfg)) if tp > 1 else 0.0),
+        )
+
+    def budgets(self, slo: Slo, plan: Optional[PlanSpec] = None):
         """SLO -> (seconds, cycle budget, byte budget); monotone in the
-        target: a higher tokens/s target can only shrink both budgets."""
-        return dataclasses.replace(self.cost, batch=slo.batch).budgets(slo, self.fixed_bytes())
+        target: a higher tokens/s target can only shrink both budgets.
+        With a tensor-parallel plan the budgets are per-shard (xM)."""
+        cost = dataclasses.replace(self.cost, batch=slo.batch)
+        if plan is not None:
+            cost = self._tp_cost(cost, plan)
+        return cost.budgets(slo, self.fixed_bytes())
 
     # -- solving ----------------------------------------------------------
 
@@ -152,6 +182,10 @@ class Planner:
         kv_scores = None
         if plan.kv_bits == "auto":
             plan, kv_scores = self._resolve_kv(plan)
+        if plan.tp == "auto":
+            if slo is None and plan.target_tps is not None:
+                slo = Slo(plan.target_tps, plan.slo_batch or self.cost.batch)
+            plan = self._resolve_tp(plan, slo)
         if plan.mode != "auto":
             if plan.draft == "auto":
                 # draft="auto" keeps the plan unsolved; the conservative
@@ -198,7 +232,7 @@ class Planner:
                     "does not budget (add act bits for a joint solve, or enable "
                     "include_dram)"
                 )
-            budgets = self.budgets(slo)
+            budgets = self.budgets(slo, plan)
             if joint:
                 kwargs["cycle_budget"] = budgets.cycle_budget
             if budgets.byte_budget is not None:
@@ -237,6 +271,51 @@ class Planner:
         bits = 8 if self._kv_scores["relative"] <= self.kv_tolerance else 32
         solved = dataclasses.replace(plan, kv_bits=bits, quant_kv=bits == 8)
         return solved, self._kv_scores
+
+    #: ``tp="auto"`` search grid — shard counts worth pricing (powers of
+    #: two; divisibility against the concrete model is the engine's check)
+    TP_GRID = (1, 2, 4, 8)
+
+    def _resolve_tp(self, plan: PlanSpec, slo: Optional[Slo]) -> PlanSpec:
+        """Resolve ``tp="auto"`` to the smallest shard count meeting the
+        SLO.
+
+        Prices the plan's *anchor* precision (the uniform/rules policy,
+        or the auto mode's match-uniform anchor) at each grid point under
+        the full three-term model — more shards divide compute and DRAM
+        but grow the wire term, so the sweep naturally stops helping once
+        the plan goes wire-bound.  Without an SLO there is nothing to
+        meet and the honest answer is ``tp=1``: sharding costs hardware
+        and buys nothing the plan asked for."""
+        if slo is None:
+            return dataclasses.replace(plan, tp=1)
+        anchor = self._anchor_policy(plan)
+        chosen = self.TP_GRID[-1]
+        for m in self.TP_GRID:
+            cand = dataclasses.replace(plan, tp=int(m))
+            cost = self._tp_cost(
+                dataclasses.replace(
+                    self.cost, batch=slo.batch, nbw=plan.nbw, prt=_solver_prt(plan.prt)
+                ),
+                cand,
+            )
+            modeled = cost.evaluate(self.params, anchor)
+            if modeled.tokens_per_second >= slo.target_tps * (1 - 1e-9):
+                chosen = int(m)
+                break
+        return dataclasses.replace(plan, tp=chosen)
+
+    def _anchor_policy(self, plan: PlanSpec):
+        """The policy ``_resolve_tp`` prices: the plan's own when it is
+        directly servable, else the auto mode's match-uniform anchor."""
+        probe = dataclasses.replace(plan, tp=None, draft=None)
+        if probe.solved:
+            return probe.to_policy(self.base)
+        return dataclasses.replace(
+            self.base,
+            bits=int(plan.weight_bits) if plan.weight_bits is not None else self.base.bits,
+            act_bits=plan.act_bits if plan.act_bits is not None else self.base.act_bits,
+        )
 
     #: ``draft="auto"`` search grid — aggressive bit widths the draft tree
     #: may requantize to, and lookahead depths worth pricing.
@@ -330,7 +409,7 @@ class Planner:
             nbw=plan.nbw,
             batch=slo.batch if slo is not None else self.cost.batch,
         )
-        return cost.evaluate(self.params, policy)
+        return self._tp_cost(cost, plan).evaluate(self.params, policy)
 
     def _traffic_hit_rate(self, plan: PlanSpec, calib) -> float:
         """PRT hit rate of the captured traffic at the plan's operating

@@ -223,6 +223,15 @@ class PlanSpec:
     # DraftSpec / "q<b>[a<ab>]:k<k>" token.  Joined the schema in PR 9;
     # omitted from JSON when unset so older plan hashes are unchanged.
     draft: Optional[Union[str, "DraftSpec"]] = None
+    # tensor-parallel shard count as the plan's fifth axis: None (defer
+    # to the engine's ``tp`` flag), "auto" (Planner picks the smallest
+    # shard count that meets the SLO — trading bits against shards at a
+    # fixed target), or a concrete M.  ``wire`` is the all-reduce
+    # precision (32 exact, 8 int8+scale compressed partial sums).
+    # Joined the schema in PR 10; omitted from JSON when unset so older
+    # plan hashes are unchanged.
+    tp: Optional[Union[int, str]] = None
+    wire: Optional[int] = None
     # solved allocation (None until a Planner ran)
     weights_per_unit: Optional[Mapping[str, Any]] = None
     acts_per_unit: Optional[Mapping[str, Any]] = None
@@ -256,6 +265,11 @@ class PlanSpec:
             raise ValueError(f"target_tps must be positive, got {self.target_tps}")
         if self.kv_bits not in (None, "auto", 8, 32):
             raise ValueError(f"kv_bits must be None, 'auto', 8, or 32, got {self.kv_bits!r}")
+        if not (self.tp is None or self.tp == "auto" or
+                (isinstance(self.tp, int) and self.tp >= 1)):
+            raise ValueError(f"tp must be None, 'auto', or an int >= 1, got {self.tp!r}")
+        if self.wire not in (None, 8, 32):
+            raise ValueError(f"wire must be None, 8, or 32, got {self.wire!r}")
         object.__setattr__(self, "draft", _coerce_draft(self.draft))
 
     # -- solved state -----------------------------------------------------
@@ -267,8 +281,9 @@ class PlanSpec:
         ``kv_bits`` of ``"auto"`` keeps any plan unsolved — the Planner
         must first probe KV sensitivity and pin a concrete 8 or 32.  A
         ``draft`` of ``"auto"`` likewise: the Planner must grid-solve
-        the (draft bits, k) pair against measured acceptance first."""
-        if self.kv_bits == "auto" or self.draft == "auto":
+        the (draft bits, k) pair against measured acceptance first; a
+        ``tp`` of ``"auto"`` needs the Planner to pin a shard count."""
+        if self.kv_bits == "auto" or self.draft == "auto" or self.tp == "auto":
             return False
         return self.mode != "auto" or self.weights_per_unit is not None
 
@@ -292,7 +307,8 @@ class PlanSpec:
     def parse(spec: str) -> "PlanSpec":
         """Parse the legacy ``--bit-policy`` grammar into a PlanSpec.
 
-          uniform:<b>[a<ab>][,kv=...][,draft=...]   one precision everywhere
+          uniform:<b>[a<ab>][,kv=...][,draft=...][,tp=...][,wire=...]
+                                              one precision everywhere
           rules:<regex>=<b>[a<ab>],...        per-path overrides
                                               (``default=``/``*=`` sets the
                                               fallback precision)
@@ -306,7 +322,10 @@ class PlanSpec:
         from a target decode tokens/s instead of the uniform reference),
         and ``draft=q<b>[a<ab>]:k<k>|auto`` (self-speculative draft
         plan; ``auto`` grid-solves the draft-bits/k pair on measured
-        acceptance).  ``kv=`` and ``draft=`` also apply to uniform mode.
+        acceptance).  ``tp=<M>|auto`` shards the quantized weight tree
+        M ways (``auto`` picks the smallest M meeting the SLO) and
+        ``wire=8|32`` sets the all-reduce precision.  ``kv=``,
+        ``draft=``, ``tp=``, and ``wire=`` also apply to uniform mode.
         """
         kind, _, rest = spec.partition(":")
         if kind == "uniform":
@@ -319,10 +338,15 @@ class PlanSpec:
                     kw["kv_bits"] = val if val == "auto" else int(val)
                 elif key == "draft":
                     kw["draft"] = val if val == "auto" else DraftSpec.parse(val)
+                elif key == "tp":
+                    kw["tp"] = val if val == "auto" else int(val)
+                elif key == "wire":
+                    kw["wire"] = int(val)
                 else:
                     raise ValueError(
                         f"unknown uniform option {opt!r} in {spec!r} "
-                        "(only kv=8|32|auto and draft=q<b>[a<ab>]:k<k>|auto)")
+                        "(only kv=8|32|auto, draft=q<b>[a<ab>]:k<k>|auto, "
+                        "tp=<M>|auto, and wire=8|32)")
             return PlanSpec(mode="uniform", weight_bits=bits,
                             act_bits=abits, **kw)
         if kind == "rules":
@@ -375,6 +399,10 @@ class PlanSpec:
                     kw["target_tps"] = float(val)
                 elif key == "draft":
                     kw["draft"] = val if val == "auto" else DraftSpec.parse(val)
+                elif key == "tp":
+                    kw["tp"] = val if val == "auto" else int(val)
+                elif key == "wire":
+                    kw["wire"] = int(val)
                 else:
                     raise ValueError(f"unknown auto option {opt!r} in {spec!r}")
             return PlanSpec(**kw)
@@ -390,6 +418,10 @@ class PlanSpec:
                 head += f",kv={self.kv_bits}"
             if self.draft is not None:
                 head += f",draft={self._fmt_draft()}"
+            if self.tp is not None:
+                head += f",tp={self.tp}"
+            if self.wire is not None:
+                head += f",wire={self.wire}"
             return head
         if self.mode == "rules":
             parts = [f"{r.pattern}={_fmt_bits(r.weight_bits, r.act_bits)}" for r in self.rules]
@@ -411,6 +443,10 @@ class PlanSpec:
             opts.append(f"slo={self.target_tps:g}")
         if self.draft is not None:
             opts.append(f"draft={self._fmt_draft()}")
+        if self.tp is not None:
+            opts.append(f"tp={self.tp}")
+        if self.wire is not None:
+            opts.append(f"wire={self.wire}")
         return ",".join([head] + opts)
 
     def _fmt_draft(self) -> str:
@@ -430,8 +466,8 @@ class PlanSpec:
         }
         if self.rules:
             out["rules"] = [r.to_json() for r in self.rules]
-        # kv_bits joined the schema in PR 8; omitted when unset so older
-        # plan hashes are unchanged
+        # kv_bits joined the schema in PR 8, tp/wire in PR 10; omitted
+        # when unset so older plan hashes are unchanged
         keys = (
             "budget_bpw",
             "target_tps",
@@ -440,6 +476,8 @@ class PlanSpec:
             "kv_bits",
             "group_size",
             "min_size",
+            "tp",
+            "wire",
         )
         for key in keys:
             val = getattr(self, key)
@@ -490,6 +528,12 @@ class PlanSpec:
             group_size=(int(spec["group_size"]) if spec.get("group_size") is not None else None),
             min_size=(int(spec["min_size"]) if spec.get("min_size") is not None else None),
             draft=_coerce_draft(spec.get("draft")),
+            tp=(
+                spec.get("tp")
+                if spec.get("tp") in (None, "auto")
+                else int(spec["tp"])
+            ),
+            wire=(int(spec["wire"]) if spec.get("wire") is not None else None),
             weights_per_unit=(_bits_from_json(wpu) if wpu is not None else None),
             acts_per_unit=(_bits_from_json(apu) if apu is not None else None),
             calibration=(dict(cal) if cal is not None else None),

@@ -162,6 +162,15 @@ class EngineConfig:
     kv_budget_bytes: Optional[int] = None
     share_prefix: bool = True      # COW-share identical prompt prefixes
     preempt: bool = True           # evict newest request when the pool runs dry
+    # Tensor-parallel serving (repro.serving.distributed): shard the
+    # quantized weight tree over ``tp`` model-parallel shards and run
+    # decode/prefill under shard_map.  A plan carrying a concrete
+    # ``tp=``/``wire=`` dimension overrides these knobs.  tp > 1
+    # requires mode="continuous", no tap, no draft, and tp visible
+    # devices (CPU: XLA_FLAGS=--xla_force_host_platform_device_count=N
+    # before importing jax).
+    tp: int = 1
+    wire: int = 32                 # all-reduce bits: 32 exact, 8 compressed
 
 
 @dataclasses.dataclass
@@ -299,6 +308,30 @@ class Engine:
         self.kv_bits = kvb if kvb is not None else (8 if ecfg.quant_kv
                                                     else 32)
         self._quant_kv = self.kv_bits == 8
+        # Tensor-parallel serving: a concrete plan tp=/wire= wins over
+        # the EngineConfig knobs (the plan is the precision contract —
+        # the Planner may have spent shards instead of bits to meet the
+        # SLO).  The mesh is fixed for the engine's lifetime.
+        plan_tp = (self.plan.tp if self.plan is not None
+                   and isinstance(self.plan.tp, int) else None)
+        plan_wire = (self.plan.wire if self.plan is not None
+                     and self.plan.wire is not None else None)
+        self.tp = plan_tp if plan_tp is not None else int(ecfg.tp)
+        self.wire_bits = (plan_wire if plan_wire is not None
+                          else int(ecfg.wire))
+        self.tp_serving = None
+        if self.tp > 1:
+            from repro.serving.distributed import TPServing
+            if ecfg.mode != "continuous":
+                raise ValueError("tensor-parallel serving requires "
+                                 "mode='continuous'")
+            if self.tap is not None:
+                raise ValueError(
+                    "tensor-parallel serving and an ActivationTap cannot "
+                    "coexist — the shard_map decode body has no "
+                    "capture path")
+            self.tp_serving = TPServing(cfg, self.tp, self.wire_bits)
+            self.params = self.tp_serving.shard_params(self.params)
         self.sched = IterationScheduler(target_batch=ecfg.batch_size,
                                         max_batch=ecfg.batch_size,
                                         prefill_budget=ecfg.prefill_budget)
@@ -350,6 +383,8 @@ class Engine:
                 self.cache = lm.init_cache(self.params, cfg,
                                            ecfg.batch_size, clen,
                                            self._quant_kv)
+            if self.tp_serving is not None:
+                self.cache = self.tp_serving.shard_cache(self.cache)
         # self-speculative decoding: the plan's draft= sub-spec requants
         # the SAME raw tree aggressively; the draft tree stays resident
         # alongside the conservative one for the engine's lifetime
@@ -365,6 +400,11 @@ class Engine:
             if ecfg.mode != "continuous":
                 raise ValueError("speculative decoding (plan draft=) "
                                  "requires mode='continuous'")
+            if self.tp_serving is not None:
+                raise ValueError(
+                    "speculative decoding is not supported under "
+                    "tensor-parallel serving — the draft/verify round "
+                    "runs outside the shard_map entry points")
             if cfg.family in ("ssm", "hybrid"):
                 raise ValueError(
                     "speculative decoding needs a pure-attention family "
@@ -509,13 +549,21 @@ class Engine:
             capture = (self.tap is not None
                        and self.tap.should_capture(self.decode_iterations))
             t0 = time.perf_counter()
-            out = lm.decode_step(
-                self.params, jnp.asarray(self._cur[:, None]), self.cache,
-                self.cfg, quant_kv=self._quant_kv,
-                active_mask=jnp.asarray(mask),
-                capture_layer_inputs=capture,
-                block_tables=(jnp.asarray(self._tables_np)
-                              if self.paged else None))
+            if self.tp_serving is not None:
+                out = self.tp_serving.decode_step(
+                    self.params, jnp.asarray(self._cur[:, None]),
+                    self.cache, quant_kv=self._quant_kv,
+                    active_mask=jnp.asarray(mask),
+                    block_tables=(jnp.asarray(self._tables_np)
+                                  if self.paged else None))
+            else:
+                out = lm.decode_step(
+                    self.params, jnp.asarray(self._cur[:, None]),
+                    self.cache, self.cfg, quant_kv=self._quant_kv,
+                    active_mask=jnp.asarray(mask),
+                    capture_layer_inputs=capture,
+                    block_tables=(jnp.asarray(self._tables_np)
+                                  if self.paged else None))
             if capture:
                 logits, self.cache, layer_inputs = out
                 self.tap.observe(layer_inputs, mask)
@@ -814,12 +862,23 @@ class Engine:
                     j = t // bs
                     if j >= nsh:   # shared blocks keep the registrant's KV
                         phys[i, t] = table[j]
-            logits, self.cache = lm.prefill_into_blocks(
-                self.params, jnp.asarray(toks), self.cache, slots,
-                phys.ravel(), offs.ravel(), self.cfg,
-                quant_kv=self._quant_kv, lengths=jnp.asarray(lengths))
+            if self.tp_serving is not None:
+                logits, self.cache = self.tp_serving.prefill_into_blocks(
+                    self.params, jnp.asarray(toks), self.cache, slots,
+                    phys.ravel(), offs.ravel(),
+                    quant_kv=self._quant_kv,
+                    lengths=jnp.asarray(lengths))
+            else:
+                logits, self.cache = lm.prefill_into_blocks(
+                    self.params, jnp.asarray(toks), self.cache, slots,
+                    phys.ravel(), offs.ravel(), self.cfg,
+                    quant_kv=self._quant_kv, lengths=jnp.asarray(lengths))
             for req in reqs:
                 self._len_np[req.slot] = req.prompt_len
+        elif self.tp_serving is not None:
+            logits, self.cache = self.tp_serving.prefill_into_slot(
+                self.params, jnp.asarray(toks), self.cache, slots,
+                quant_kv=self._quant_kv, lengths=jnp.asarray(lengths))
         else:
             logits, self.cache = lm.prefill_into_slot(
                 self.params, jnp.asarray(toks), self.cache, slots,
@@ -942,6 +1001,13 @@ class Engine:
             if self.plan.calibration is not None:
                 kw["machine"] = planning.machine_from_json(
                     self.plan.calibration)
+                disp = planning.dispatch_from_json(self.plan.calibration)
+                if disp is not None:
+                    kw["dispatch_cycles"] = disp
+        if self.tp_serving is not None:
+            kw["tp"] = self.tp_serving.tp
+            kw["wire_bits"] = self.tp_serving.wire_bits
+            kw["allreduce_elems"] = planning.tp_allreduce_elems(self.cfg)
         return planning.DecodeCostModel(**kw)
 
     def _modeled_iter_seconds(self, occupancy: int) -> Optional[float]:
@@ -1080,10 +1146,28 @@ class Engine:
                 "precision cannot hot-swap under in-flight requests; "
                 "rebuild the engine to change it", UserWarning,
                 stacklevel=2)
+        want_tp = spec.tp if isinstance(spec.tp, int) else None
+        if want_tp is not None and want_tp != self.tp:
+            warnings.warn(
+                f"plan requests tp={want_tp} but the engine serves "
+                f"tp={self.tp} — the mesh is fixed at construction; "
+                "rebuild the engine to change shard count", UserWarning,
+                stacklevel=2)
+        if spec.wire is not None and spec.wire != self.wire_bits:
+            warnings.warn(
+                f"plan requests wire={spec.wire} but the engine serves "
+                f"wire={self.wire_bits} — all-reduce precision is fixed "
+                "at construction; rebuild the engine to change it",
+                UserWarning, stacklevel=2)
         if force_requantize or policy != self.quant_policy:
             self.params, b0, b1 = quantize_params(self._raw_params,
                                                   policy)
             self.compression = b0 / max(b1, 1)
+            if self.tp_serving is not None:
+                # the fresh tree replaces the sharded one: re-place it on
+                # the mesh so decode keeps running sharded without a
+                # resharding transfer on first use
+                self.params = self.tp_serving.shard_params(self.params)
         self.quant_policy = policy
         self.plan = spec
         # the report must track the plan actually served — a stale one
@@ -1185,6 +1269,23 @@ class Engine:
             jnp.asarray(np.asarray(indices, np.uint32)),
             self.ecfg.seed, self.ecfg.temperature))
 
+    def _tp_stats(self) -> Dict[str, Any]:
+        """Observability for tensor-parallel serving: shard count, wire
+        precision, modeled wire seconds and their share of the full-pool
+        iteration, and the per-shard all-reduce bytes one decode
+        iteration moves."""
+        b = self.ecfg.batch_size
+        tw = (self._plan_cost_model(b).t_wire(b)
+              if self._plan_units is not None else None)
+        secs = self._modeled_iter_seconds(b)
+        return {"shards": self.tp_serving.tp,
+                "wire_bits": self.tp_serving.wire_bits,
+                "allreduce_bytes_per_iter":
+                    self.tp_serving.allreduce_bytes_per_iter(b),
+                "modeled_t_wire_s": tw,
+                "modeled_wire_share": (tw / secs if tw is not None
+                                       and secs else None)}
+
     def stats(self) -> Dict[str, Any]:
         lats = [c.latency_s for c in self.completions.values()]
         ttfts = [c.ttft_s for c in self.completions.values()]
@@ -1213,6 +1314,10 @@ class Engine:
                 # (the gate metric), served KV precision, pool stats
                 "peak_active": self.peak_active,
                 "kv_bits": self.kv_bits,
+                # tensor-parallel serving: shard count, wire precision,
+                # modeled wire share (None when serving single-device)
+                "tp": (self._tp_stats() if self.tp_serving is not None
+                       else None),
                 "block_pool": (self.block_mgr.stats()
                                if self.paged else None),
                 # self-speculative decoding: draft plan, rounds,
